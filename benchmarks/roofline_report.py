@@ -1,0 +1,50 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and prints
+the three-term roofline per (arch x shape) cell on the single-pod mesh,
+plus per-cell bottleneck and useful-FLOPs ratio.  See EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import print_table, write_artifact
+from repro.launch.roofline import ARTIFACTS, roofline_row
+
+
+def load_rows(art_dir: Path, suffix: str = "single"):
+    rows = []
+    for f in sorted(art_dir.glob(f"*__{suffix}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            rows.append({"cell": rec["cell"], "skipped": rec.get("reason", "")})
+        else:
+            rows.append(roofline_row(rec))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(ARTIFACTS))
+    args = ap.parse_args(argv)
+    rows = load_rows(Path(args.dir))
+    table = []
+    for r in rows:
+        if "skipped" in r:
+            table.append([r["cell"], "—", "—", "—", "skipped", "—", "—"])
+            continue
+        table.append([
+            r["cell"], f"{r['t_compute_s']:.4f}", f"{r['t_memory_s']:.4f}",
+            f"{r['t_collective_s']:.4f}", r["dominant"],
+            f"{r['useful_flops_ratio']:.2f}", f"{r['roofline_fraction']:.3f}"])
+    print("\n== Roofline (single-pod 16x16, per-device terms in seconds) ==")
+    print_table(["cell", "t_comp", "t_mem", "t_coll", "dominant",
+                 "useful-FLOPs", "roofline"], table)
+    write_artifact("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME ...]
+
+| module          | paper artifact                          |
+|-----------------|------------------------------------------|
+| precond_time    | Table 2 / Fig 1 (preconditioner cost)    |
+| convergence     | Fig 6 / Tables 17-19 (optimizer quality) |
+| dominance       | Figs 4/5 (Gram diagonal dominance)       |
+| lr_sweep        | Tables 9-13 (matrix-LR sensitivity)      |
+| roofline_report | deliverable (g), from dry-run artifacts  |
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import convergence, dominance, lr_sweep, precond_time, roofline_report
+
+BENCHES = {
+    "precond_time": lambda full: precond_time.main([] if full else ["--quick"]),
+    "convergence": lambda full: convergence.main(
+        [] if full else ["--steps", "300"]),
+    "dominance": lambda full: dominance.main(
+        [] if full else ["--steps", "200"]),
+    "lr_sweep": lambda full: lr_sweep.main(
+        [] if full else ["--steps", "120"]),
+    "roofline_report": lambda full: roofline_report.main([]),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    names = args.only or list(BENCHES)
+    failures = []
+    for name in names:
+        print(f"\n{'=' * 70}\n== benchmark: {name}\n{'=' * 70}", flush=True)
+        t0 = time.time()
+        try:
+            BENCHES[name](args.full)
+            print(f"[{name}] done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:  # keep running the rest, fail at the end
+            failures.append(name)
+            print(f"[{name}] FAILED: {e!r}", flush=True)
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        sys.exit(1)
+    print("\nAll benchmarks complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fault-tolerance demo: kill training mid-run, restart, and verify the
+resumed run is bitwise-identical to an uninterrupted one.
+
+    PYTHONPATH=src python examples/fault_tolerant_restart.py
+
+Exercises the checkpoint manager's atomic-commit protocol and the
+deterministic data stream's (seed, host, step) addressing — together these
+make restart-after-failure exact, not approximate.
+"""
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.launch.train import train
+
+STEPS, CKPT_EVERY = 60, 20
+ARCH = "llama-60m"
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="rmnp_ckpt_")
+    try:
+        print("=== uninterrupted run ===")
+        p_ref, _, h_ref = train(ARCH, steps=STEPS, batch=4, seq=32,
+                                log_every=10, seed=3)
+
+        print("\n=== interrupted run: part 1 (simulated failure at step 40) ===")
+        train(ARCH, steps=STEPS, stop_at=40, batch=4, seq=32, log_every=10,
+              seed=3, ckpt_dir=tmp, ckpt_every=CKPT_EVERY)
+
+        print("\n=== restart: resumes from the last committed checkpoint ===")
+        p_res, _, h_res = train(ARCH, steps=STEPS, batch=4, seq=32,
+                                log_every=10, seed=3,
+                                ckpt_dir=tmp, ckpt_every=CKPT_EVERY)
+
+        import jax
+        diffs = jax.tree_util.tree_map(
+            lambda a, b: float(np.max(np.abs(np.asarray(a, np.float32)
+                                             - np.asarray(b, np.float32)))),
+            p_ref, p_res)
+        worst = max(jax.tree_util.tree_leaves(diffs))
+        print(f"\nmax |param diff| interrupted-vs-uninterrupted: {worst:.3e}")
+        print("restart is exact" if worst == 0.0 else
+              "restart drift detected (investigate!)")
+        assert worst == 0.0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

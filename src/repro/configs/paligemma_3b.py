@@ -1,0 +1,18 @@
+"""PaliGemma-3B — gemma decoder backbone; SigLIP frontend is a STUB:
+``input_specs()`` provides precomputed patch embeddings. [arXiv:2407.07726]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab=257216,
+    frontend="vision",
+    n_frontend_tokens=256,
+    tie_embeddings=True,
+))

@@ -1,0 +1,13 @@
+"""Phi-3-mini-3.8B — dense, RoPE SwiGLU, MHA. [arXiv:2404.14219]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32064,
+))

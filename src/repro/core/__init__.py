@@ -1,0 +1,15 @@
+"""Core library: the paper's contribution (RMNP) plus the Muon / AdamW
+baselines, mixed update strategy, schedules and preconditioner diagnostics."""
+from repro.core.adamw import adamw  # noqa: F401
+from repro.core.dominance import dominance_ratios, global_dominance  # noqa: F401
+from repro.core.mixed import (  # noqa: F401
+    ClipStats,
+    MixedState,
+    clip_by_global_norm,
+    is_matrix_param,
+    mixed_optimizer,
+)
+from repro.core.muon import muon, newton_schulz  # noqa: F401
+from repro.core.rmnp import rmnp, rms_lr_scale, row_normalize  # noqa: F401
+from repro.core.schedule import constant, cosine_with_warmup  # noqa: F401
+from repro.core.types import Optimizer, apply_updates  # noqa: F401

@@ -1,0 +1,64 @@
+"""Diagonal-dominance diagnostics for the Muon/RMNP preconditioner
+(paper Section 3.2 / Appendix B).
+
+For a momentum matrix V (paper convention rows = d_out), the Gram matrix is
+G = V V^T in R^{m x m} and
+
+    r_i = G_ii / mean_{j != i} |G_ij|
+
+We store matrices as (..., d_in, d_out), so the paper's Gram is
+``stored^T @ stored`` over the last two dims.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mixed import is_matrix_param
+from repro.core.types import PyTree, map_with_path
+
+
+class DominanceStats(NamedTuple):
+    r_avg: jax.Array
+    r_min: jax.Array
+    r_max: jax.Array
+
+
+def dominance_ratios(v: jax.Array, eps: float = 1e-12) -> DominanceStats:
+    """r_avg/min/max for one stored (d_in, d_out) matrix (batched over any
+    leading dims, then averaged)."""
+    v = v.astype(jnp.float32)
+    gram = jnp.swapaxes(v, -1, -2) @ v            # (..., m, m), m = d_out
+    m = gram.shape[-1]
+    diag = jnp.diagonal(gram, axis1=-2, axis2=-1)  # (..., m)
+    abs_sum = jnp.sum(jnp.abs(gram), axis=-1) - jnp.abs(diag)
+    off_mean = abs_sum / max(1, m - 1)
+    r = diag / (off_mean + eps)
+    return DominanceStats(
+        r_avg=jnp.mean(r),
+        r_min=jnp.mean(jnp.min(r, axis=-1)),
+        r_max=jnp.mean(jnp.max(r, axis=-1)),
+    )
+
+
+def global_dominance(momentum: PyTree, matrix_embed: bool = True) -> Dict[str, jax.Array]:
+    """Average per-parameter r_avg/min/max over all matrix parameters
+    (paper Eq. 14-16)."""
+    stats = []
+
+    def visit(path, leaf):
+        if leaf is not None and is_matrix_param(path, leaf, matrix_embed):
+            stats.append(dominance_ratios(leaf))
+        return leaf
+
+    map_with_path(visit, momentum)
+    if not stats:
+        z = jnp.zeros(())
+        return {"r_avg": z, "r_min": z, "r_max": z}
+    return {
+        "r_avg": jnp.mean(jnp.stack([s.r_avg for s in stats])),
+        "r_min": jnp.mean(jnp.stack([s.r_min for s in stats])),
+        "r_max": jnp.mean(jnp.stack([s.r_max for s in stats])),
+    }

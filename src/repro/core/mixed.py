@@ -1,0 +1,123 @@
+"""The paper's mixed update strategy: matrix parameters -> RMNP / Muon,
+everything else (norms, biases, 1-D SSM params, optionally embeddings and the
+LM head) -> AdamW.  Includes global-norm gradient clipping with clip-rate
+tracking (paper Appendix E.7).
+
+Implemented as a single per-leaf-dispatch optimizer so the whole state is one
+pytree (momentum for matrix leaves, Adam (mu, nu) for the rest) — this keeps
+pjit sharding of optimizer state trivially aligned with parameter sharding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.muon import newton_schulz
+from repro.core.rmnp import rms_lr_scale, row_normalize
+from repro.core.types import Optimizer, PyTree, Schedule, map_with_path
+
+# parameter path fragments always handled by AdamW regardless of rank
+_NON_MATRIX_TOKENS = ("norm", "bias", "scale", "a_log", "dt_", "conv")
+
+
+def is_matrix_param(path: str, leaf, matrix_embed: bool = True) -> bool:
+    """True when the leaf gets the matrix (RMNP/Muon) optimizer."""
+    lp = path.lower()
+    if any(tok in lp for tok in _NON_MATRIX_TOKENS):
+        return False
+    if not matrix_embed and ("embed" in lp or "lm_head" in lp):
+        return False
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    return leaf.shape[-1] > 1 and leaf.shape[-2] > 1
+
+
+class ClipStats(NamedTuple):
+    global_norm: jax.Array
+    clipped: jax.Array  # 1.0 when the step was clipped
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree_util.tree_leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    clipped = jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+    return clipped, ClipStats(global_norm=gnorm, clipped=(gnorm > max_norm).astype(jnp.float32))
+
+
+class MixedState(NamedTuple):
+    momentum: PyTree  # fp32; matrix-optimizer momentum OR Adam mu per leaf
+    nu: PyTree        # fp32; Adam second moment (zero-size unused for matrix leaves)
+
+
+def mixed_optimizer(
+    matrix_kind: str,                      # "rmnp" | "muon" | "adamw"
+    lr_matrix: Schedule,
+    lr_adamw: Schedule,
+    beta: float = 0.95,
+    weight_decay: float = 0.1,
+    adam_betas=(0.9, 0.95),
+    adam_eps: float = 1e-8,
+    rn_eps: float = 1e-8,
+    matrix_embed: bool = True,
+    ns_steps: int = 5,
+    use_kernel: bool = False,
+) -> Optimizer:
+    """Build the paper's mixed optimizer.  ``matrix_kind='adamw'`` degrades to
+    plain AdamW on everything (the paper's AdamW baseline)."""
+    if matrix_kind not in ("rmnp", "muon", "adamw"):
+        raise ValueError(f"unknown matrix optimizer {matrix_kind!r}")
+    b1, b2 = adam_betas
+
+    def _is_mat(path, leaf):
+        return matrix_kind != "adamw" and is_matrix_param(path, leaf, matrix_embed)
+
+    def init(params):
+        momentum = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        # second moment only needed on AdamW leaves; keep zeros elsewhere so
+        # the state tree structure matches params everywhere (simple sharding)
+        nu = map_with_path(
+            lambda path, p: jnp.zeros(p.shape if not _is_mat(path, p) else (1,) * p.ndim,
+                                      jnp.float32), params)
+        return MixedState(momentum=momentum, nu=nu)
+
+    def update(grads, state, params, step):
+        eta_m = lr_matrix(step)
+        eta_a = lr_adamw(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(path, g, v, nu, p):
+            g32 = g.astype(jnp.float32)
+            p32 = p.astype(jnp.float32)
+            if _is_mat(path, p):
+                if use_kernel and matrix_kind == "rmnp":
+                    from repro.kernels import ops as kops
+                    v_new, d = kops.rmnp_momentum_rownorm(g32, v, beta=beta, eps=rn_eps)
+                else:
+                    v_new = beta * v + (1.0 - beta) * g32
+                    if matrix_kind == "rmnp":
+                        d = row_normalize(v_new, rn_eps)
+                    else:
+                        d = newton_schulz(v_new, steps=ns_steps, use_kernel=use_kernel)
+                scale = eta_m * rms_lr_scale(p.shape)
+                return -scale * (d + weight_decay * p32), v_new, nu
+            # AdamW leaf
+            mu_new = b1 * v + (1 - b1) * g32
+            nu_new = b2 * nu + (1 - b2) * jnp.square(g32)
+            d = (mu_new / bc1) / (jnp.sqrt(nu_new / bc2) + adam_eps)
+            return -eta_a * (d + weight_decay * p32), mu_new, nu_new
+
+        paths_tree = map_with_path(lambda path, _: path, params)
+        out = jax.tree_util.tree_map(upd, paths_tree, grads, state.momentum, state.nu, params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), MixedState(momentum=pick(1), nu=pick(2))
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,73 @@
+"""Muon baseline (Algorithm 1): Newton-Schulz orthogonalization of momentum.
+
+Reference coefficients from Jordan et al. [11]; 5 iterations by default.
+The NS iteration costs O(mn * min(m, n)) per step — the quantity RMNP removes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rmnp import rms_lr_scale
+from repro.core.types import Optimizer, PyTree, Schedule
+
+_NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def newton_schulz(v: jax.Array, steps: int = 5, eps: float = 1e-7,
+                  use_kernel: bool = False) -> jax.Array:
+    """Approximate (V V^T)^{-1/2} V via the quintic Newton-Schulz iteration.
+
+    Operates on the last two dims; leading dims are batched. Always iterates
+    on the smaller Gram side (transpose if rows > cols).
+    """
+    a, b, c = _NS_COEFFS
+    orig_dtype = v.dtype
+    x = v.astype(jnp.float32)
+    transpose = x.shape[-2] > x.shape[-1]
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    x = x / (jnp.linalg.norm(x, axis=(-2, -1), keepdims=True) + eps)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        for _ in range(steps):
+            x = kops.ns_step(x, a, b, c)
+    else:
+        for _ in range(steps):
+            g = x @ jnp.swapaxes(x, -1, -2)          # (m, m) Gram
+            x = a * x + (b * g + c * (g @ g)) @ x    # quintic polynomial
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    return x.astype(orig_dtype)
+
+
+class MuonState(NamedTuple):
+    momentum: PyTree
+
+
+def muon(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
+         ns_steps: int = 5, use_kernel: bool = False) -> Optimizer:
+    def init(params):
+        return MuonState(momentum=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, step):
+        eta = lr(step)
+
+        def upd(g, v, p):
+            v_new = beta * v + (1.0 - beta) * g.astype(jnp.float32)
+            d = newton_schulz(v_new, steps=ns_steps, use_kernel=use_kernel)
+            scale = eta * rms_lr_scale(p.shape)
+            return (-scale * (d + weight_decay * p.astype(jnp.float32))), v_new
+
+        out = jax.tree_util.tree_map(upd, grads, state.momentum, params)
+        updates = jax.tree_util.tree_map(lambda x: x[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        momentum = jax.tree_util.tree_map(lambda x: x[1], out,
+                                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, MuonState(momentum=momentum)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,72 @@
+"""RMNP — Row-Momentum Normalized Preconditioning (the paper's contribution).
+
+Algorithm 2:
+    V_t = beta * V_{t-1} + (1 - beta) * G_t
+    D_t = RN(V_t) = (diag(V_t V_t^T))^{-1/2} V_t      (row-wise l2 normalize)
+    W_{t+1} = W_t - eta * (D_t + wd * W_t)
+
+Storage convention: every matmul parameter in this framework is stored as
+(..., d_in, d_out); the paper's "row" (one output neuron's fan-in vector,
+normalized along d_in) is therefore a *column* of the stored matrix, i.e. we
+normalize along axis -2.  Leading axes (scan layer stacks, MoE expert stacks)
+are treated as independent matrices.
+
+Per-iteration cost is O(mn) — a single elementwise pass + a row reduction —
+versus Muon's O(mn * min(m, n)) Newton-Schulz matmuls.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Optimizer, PyTree, Schedule
+
+
+def row_normalize(v: jax.Array, eps: float = 1e-8, in_axis: int = -2) -> jax.Array:
+    """(diag(V V^T))^{-1/2} V: l2-normalize each output neuron's fan-in."""
+    norm = jnp.sqrt(jnp.sum(jnp.square(v.astype(jnp.float32)), axis=in_axis, keepdims=True))
+    return (v / (norm + eps)).astype(v.dtype)
+
+
+def rms_lr_scale(shape) -> float:
+    """Muon/RMNP RMS scaling: lr * max(1, sqrt(d_out / d_in)) (Eq. 17/18)."""
+    d_in, d_out = shape[-2], shape[-1]
+    return max(1.0, (d_out / d_in) ** 0.5)
+
+
+class RmnpState(NamedTuple):
+    momentum: PyTree
+
+
+def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
+         eps: float = 1e-8, use_kernel: bool = False) -> Optimizer:
+    """RMNP for matrix parameters. ``use_kernel`` selects the fused Pallas path."""
+
+    def init(params):
+        return RmnpState(momentum=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, step):
+        eta = lr(step)
+
+        def upd(g, v, p):
+            if use_kernel:
+                from repro.kernels import ops as kops
+                v_new, d = kops.rmnp_momentum_rownorm(
+                    g.astype(jnp.float32), v, beta=beta, eps=eps)
+            else:
+                v_new = beta * v + (1.0 - beta) * g.astype(jnp.float32)
+                d = row_normalize(v_new, eps)
+            scale = eta * rms_lr_scale(p.shape)
+            return (-scale * (d + weight_decay * p.astype(jnp.float32))), v_new
+
+        out = jax.tree_util.tree_map(upd, grads, state.momentum, params)
+        updates = jax.tree_util.tree_map(lambda x: x[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        momentum = jax.tree_util.tree_map(lambda x: x[1], out,
+                                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, RmnpState(momentum=momentum)
+
+    return Optimizer(init=init, update=update)

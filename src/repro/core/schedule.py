@@ -1,0 +1,24 @@
+"""Learning-rate schedules (cosine with linear warmup, per the paper)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak_lr: float, total_steps: int,
+                       warmup_frac: float = 0.1, min_ratio: float = 0.0):
+    warmup_steps = max(1, int(total_steps * warmup_frac))
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / warmup_steps
+        progress = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def constant(lr: float):
+    def schedule(step):
+        return jnp.full((), lr, jnp.float32)
+    return schedule

@@ -1,0 +1,68 @@
+"""Optimizer interface.
+
+All optimizers are pure-pytree transformations compatible with jit / pjit:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+``updates`` already contain the (negative) learning-rate scaling, i.e. the
+new parameters are ``params + updates``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]  # step -> lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Any]  # (grads, state, params, step) -> (updates, state)
+
+
+class MixedState(NamedTuple):
+    matrix: PyTree
+    other: PyTree
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates, is_leaf=lambda x: x is None)
+
+
+def tree_paths(tree: PyTree):
+    """[(path_string, leaf)] with '/'-joined dict keys."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    def _fn(path, leaf):
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        return fn("/".join(keys), leaf)
+    return jax.tree_util.tree_map_with_path(_fn, tree)

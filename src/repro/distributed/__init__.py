@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    axis_rules,
+    logical,
+    named_sharding,
+    spec_for,
+)

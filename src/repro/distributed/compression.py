@@ -1,0 +1,121 @@
+"""Gradient compression for the cross-replica reduction.
+
+Two mechanisms, composable with the mixed optimizer:
+
+1. ``grad_dtype="bfloat16"`` on the train step (implicit XLA reduction in
+   bf16 — halves all-reduce wire bytes, zero code at the collective site).
+
+2. Explicit int8 error-feedback compression (this module), used on a pure
+   data-parallel axis via ``shard_map``.  A ring fp32 all-reduce moves
+   ``2 * 4n * (g-1)/g`` wire bytes; the compressed schedule is
+
+       a) quantize (g + error) to blockwise-int8            [local]
+       b) all_to_all the int8 chunks + fp32 block scales    [n int8 bytes]
+       c) dequantize + sum the received chunks in fp32      [local]
+       d) all_gather the summed chunk in bf16               [2n bytes]
+
+   ~2.7x fewer wire bytes than fp32 ring all-reduce, ~1.4x fewer than
+   bf16.  The quantization residual is fed back the next step (error
+   feedback, Seide et al. lineage), so the *accumulated* update is
+   unbiased and convergence is preserved (tests/test_compression.py).
+
+   Rounding is deterministic (ties-to-even): with error feedback,
+   stochastic rounding adds nothing and would break bitwise restart
+   reproducibility.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PyTree
+
+_BLOCK = 512  # quantization block (elements) — one fp32 scale per block
+
+
+class CompressionState(NamedTuple):
+    error: PyTree  # fp32 error-feedback accumulators, like-params
+
+
+def init_compression_state(params: PyTree) -> CompressionState:
+    return CompressionState(error=jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+# ---------------------------------------------------------------------------
+# quantizer
+# ---------------------------------------------------------------------------
+
+def quantize_blockwise(flat: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """fp32 (n,) with n % _BLOCK == 0 -> (int8 (n,), fp32 scales (n/_BLOCK,))."""
+    xb = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(xb / jnp.maximum(scale, 1e-30)), -127, 127)
+    return q.astype(jnp.int8).reshape(-1), scale[:, 0]
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array) -> jax.Array:
+    xb = q.reshape(-1, _BLOCK).astype(jnp.float32) * scale[:, None]
+    return xb.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# compressed mean over a mesh axis (call inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[0]) % mult
+    return jnp.pad(x, (0, pad)) if pad else x
+
+
+def compressed_mean_leaf(g: jax.Array, err: jax.Array, axis_name: str,
+                         n_dev: int):
+    """Mean of ``g`` over ``axis_name`` with int8 a2a + bf16 gather.
+
+    Returns (mean (g.shape fp32), new_err)."""
+    v = g.astype(jnp.float32) + err
+    n = v.size
+    flat = _pad_to(v.reshape(-1), n_dev * _BLOCK)
+    q, scale = quantize_blockwise(flat)
+    deq = dequantize_blockwise(q, scale)
+    new_err = (flat - deq)[:n].reshape(g.shape)
+
+    # b) exchange chunks: row j of the result is sender-j's chunk for us
+    qs = q.reshape(n_dev, -1)
+    ss = scale.reshape(n_dev, -1)
+    q_recv = jax.lax.all_to_all(qs, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)
+    s_recv = jax.lax.all_to_all(ss, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)
+
+    # c) dequantize + sum in fp32 (the "server" accumulation)
+    chunk_sum = jnp.sum(
+        jax.vmap(dequantize_blockwise)(q_recv, s_recv), axis=0)
+
+    # d) share the result in bf16
+    gathered = jax.lax.all_gather(chunk_sum.astype(jnp.bfloat16), axis_name,
+                                  tiled=True).astype(jnp.float32)
+    mean = gathered[:n].reshape(g.shape) / n_dev
+    return mean, new_err
+
+
+def compressed_mean(grads: PyTree, state: CompressionState, axis_name: str,
+                    n_dev: int):
+    """Tree-wide compressed mean; call inside shard_map over ``axis_name``.
+    ``n_dev`` is the (static) size of the mesh axis."""
+
+    def leaf(g, e):
+        return compressed_mean_leaf(g, e, axis_name, n_dev)
+
+    out = jax.tree_util.tree_map(leaf, grads, state.error)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), CompressionState(error=pick(1))
+
+
+# reference (uncompressed) mean, for the tests' convergence comparison
+def exact_mean(grads: PyTree, axis_name: str):
+    return jax.tree_util.tree_map(
+        lambda g: jax.lax.pmean(g.astype(jnp.float32), axis_name), grads)

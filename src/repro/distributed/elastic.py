@@ -1,0 +1,50 @@
+"""Elastic scaling: move a training state between meshes of different size.
+
+On preemption / node loss the job restarts on whatever slice is healthy.
+Checkpoints are mesh-agnostic (host-local npz of full logical arrays, or
+per-host shards re-assembled by the manager), so elasticity is:
+
+    state_small = reshard(state, new_mesh, sharding_fn)
+
+``reshard`` re-device_puts every leaf under the shardings computed for the
+*new* mesh via the same logical-axis rules — the divisibility-aware rule
+table (distributed/sharding.py) silently falls back to replication for
+dims the smaller mesh no longer divides, so any (data, model) factor of
+the original mesh is a valid restart target.
+
+The data pipeline is (seed, host, step)-addressed, so changing num_hosts
+re-partitions the stream without replaying or skipping batches
+(tests/test_substrate.py::test_stream_elastic_repartition).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import spec_for
+
+
+def reshard(tree: Any, mesh: Mesh,
+            sharding_of: Optional[Callable[[Any], NamedSharding]] = None):
+    """device_put every leaf under ``mesh``.  ``sharding_of(leaf) ->
+    NamedSharding`` overrides the default (replicate everything)."""
+    def leaf(x):
+        sh = (sharding_of(x) if sharding_of is not None
+              else NamedSharding(mesh, P()))
+        return jax.device_put(x, sh)
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def reshard_like_specs(tree: Any, spec_tree: Any, mesh: Mesh):
+    """Reshard with per-leaf logical axis names (ParamSpec.axes trees)."""
+    def leaf(x, sp):
+        return jax.device_put(
+            x, NamedSharding(mesh, spec_for(x.shape, sp.axes, mesh)))
+
+    from repro.models.layers import ParamSpec
+    return jax.tree_util.tree_map(
+        leaf, tree, spec_tree,
+        is_leaf=lambda t: isinstance(t, ParamSpec))

@@ -1,0 +1,84 @@
+"""Straggler / hang detection for the training loop.
+
+On a multi-thousand-chip job the common failure modes are (a) a host that
+slows down (thermal, ECC retries, network flaps) and (b) a host that hangs
+in a collective.  SPMD gives no per-op timeout, so the mitigation ladder is
+
+    detect (this module) -> checkpoint -> restart without the bad host
+    (elastic.py reshard) -> resume from the deterministic stream position.
+
+``StepTimeMonitor`` keeps an exponential moving average / variance of step
+wall time and flags steps beyond ``k`` sigmas or an absolute multiple of
+the mean — the signal a launcher uses to trigger the ladder.  ``Watchdog``
+runs a timer thread that fires a callback if a step exceeds a hard
+deadline (collective hang), since the step itself will never return.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional
+
+
+class StepTimeMonitor:
+    def __init__(self, ema_alpha: float = 0.05, sigma_k: float = 4.0,
+                 abs_factor: float = 3.0, warmup_steps: int = 5,
+                 min_rel: float = 1.25):
+        self.alpha = ema_alpha
+        self.sigma_k = sigma_k
+        self.abs_factor = abs_factor
+        self.warmup = warmup_steps
+        # sigma-based detection needs a relative floor: exclusion feedback
+        # shrinks the EWMA variance, so tiny jitter would otherwise flag
+        self.min_rel = min_rel
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+        self.stragglers: List[dict] = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True when the step is flagged as a straggler."""
+        self.n += 1
+        if self.mean is None:
+            self.mean = seconds
+            return False
+        flagged = False
+        if self.n > self.warmup:
+            sigma = self.var ** 0.5
+            if (seconds > self.mean * self.abs_factor
+                    or (sigma > 0 and seconds > self.mean * self.min_rel
+                        and seconds > self.mean + self.sigma_k * sigma)):
+                flagged = True
+                self.stragglers.append(
+                    {"step": step, "seconds": seconds, "mean": self.mean})
+        # EMA update (straggler samples excluded so one hang doesn't mask
+        # the next)
+        if not flagged:
+            d = seconds - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return flagged
+
+
+class Watchdog:
+    """Fires ``on_timeout`` if ``pet`` is not called within ``deadline_s``."""
+
+    def __init__(self, deadline_s: float, on_timeout: Callable[[], None]):
+        self.deadline = deadline_s
+        self.on_timeout = on_timeout
+        self._timer: Optional[threading.Timer] = None
+        self._lock = threading.Lock()
+
+    def pet(self):
+        with self._lock:
+            if self._timer is not None:
+                self._timer.cancel()
+            self._timer = threading.Timer(self.deadline, self.on_timeout)
+            self._timer.daemon = True
+            self._timer.start()
+
+    def stop(self):
+        with self._lock:
+            if self._timer is not None:
+                self._timer.cancel()
+                self._timer = None

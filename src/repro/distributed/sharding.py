@@ -1,0 +1,114 @@
+"""Logical-axis sharding (MaxText-style).
+
+Model code annotates tensors with *logical* axis names; a rules table maps
+logical names to mesh axes.  Rules silently drop a mapping when the dimension
+is not divisible by the mesh axis size (e.g. vocab=73448 on a 16-way axis),
+falling back to replication on that dim — GSPMD would otherwise pad, and
+uneven jit in_shardings are an error.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxis = Union[str, None, Tuple[str, ...]]
+
+# logical name -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,                  # activations: sequence replicated by default
+    "res_seq": None,              # residual-stream seq axis: map to "model"
+                                  # for Megatron-style sequence parallelism
+    "kv_seq": "model",            # decode KV caches: shard the long axis
+    "long_seq": ("data", "model"),  # 500k decode, batch=1: use both axes
+    "embed": None,                # d_model on activations
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,             # often < mesh axis; replicate by default
+    "mlp": "model",               # d_ff
+    "expert": "model",            # expert parallelism
+    "d_in": "data",               # FSDP-ish weight shard along fan-in
+    "d_inner": "model",           # ssm inner dim
+    "layers": None,
+    "lora": None,
+    "state": None,
+}
+
+_ctx = threading.local()
+
+
+def _get():
+    if not hasattr(_ctx, "stack"):
+        _ctx.stack = []
+    return _ctx.stack
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    _get().append((mesh, dict(DEFAULT_RULES, **(rules or {}))))
+    try:
+        yield
+    finally:
+        _get().pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    s = _get()
+    return s[-1][0] if s else None
+
+
+def _resolve_axis(name: LogicalAxis, dim_size: int, mesh: Mesh, rules: dict,
+                  used: set) -> Optional[Union[str, Tuple[str, ...]]]:
+    if name is None:
+        return None
+    mapped = rules.get(name, None) if isinstance(name, str) else name
+    if mapped is None:
+        return None
+    axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+    # keep only mesh axes that exist, are >1 (size-1 shardings are noise),
+    # are unused, and divide the dim
+    chosen = []
+    prod = 1
+    for ax in axes:
+        if (ax in mesh.shape and mesh.shape[ax] > 1 and ax not in used
+                and dim_size % (prod * mesh.shape[ax]) == 0):
+            chosen.append(ax)
+            prod *= mesh.shape[ax]
+    for ax in chosen:
+        used.add(ax)
+    if not chosen:
+        return None
+    return chosen[0] if len(chosen) == 1 else tuple(chosen)
+
+
+def spec_for(shape: Sequence[int], names: Sequence[LogicalAxis],
+             mesh: Optional[Mesh] = None, rules: Optional[dict] = None) -> P:
+    """PartitionSpec for a concrete shape given logical names."""
+    s = _get()
+    if mesh is None and s:
+        mesh = s[-1][0]
+    if rules is None:
+        rules = s[-1][1] if s else DEFAULT_RULES
+    if mesh is None:
+        return P()
+    assert len(shape) == len(names), (shape, names)
+    used: set = set()
+    return P(*[_resolve_axis(n, d, mesh, rules, used) for d, n in zip(shape, names)])
+
+
+def logical(x: jax.Array, names: Sequence[LogicalAxis]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside a mesh ctx."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, names, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape: Sequence[int], names: Sequence[LogicalAxis],
+                   mesh: Mesh, rules: Optional[dict] = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, names, mesh, rules))

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the optimizer hot loops (validated in interpret
+mode on CPU): rmnp_update (fused momentum + row-norm), matmul (tiled MXU),
+newton_schulz (Muon baseline step).  ref.py holds the pure-jnp oracles."""

@@ -1,0 +1,51 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode for correctness
+testing; on TPU they compile to Mosaic.  ``_interpret()`` picks automatically.
+Leading batch dims (layer stacks, expert stacks) are vmapped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import matmul as _mm
+from repro.kernels import newton_schulz as _ns
+from repro.kernels import rmnp_update as _rm
+
+# kernels fall back to the jnp reference above this fan-in (VMEM stripes
+# would degenerate) — embedding-sized matrices take the XLA path.
+_MAX_KERNEL_FAN_IN = 32768
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rmnp_momentum_rownorm(g, v, *, beta: float, eps: float = 1e-8):
+    """Fused momentum EMA + row (fan-in) l2 normalization.
+    g, v: (..., d_in, d_out) fp32.  Returns (v_new, d)."""
+    if g.shape[-2] > _MAX_KERNEL_FAN_IN:
+        from repro.kernels.ref import rmnp_momentum_rownorm_ref
+        return rmnp_momentum_rownorm_ref(g, v, beta=beta, eps=eps)
+    return _rm.rmnp_momentum_rownorm_2d(g, v, beta=beta, eps=eps,
+                                        interpret=_interpret())
+
+
+def ns_step(x, a: float, b: float, c: float):
+    """One Newton-Schulz iteration on (..., m, n) fp32 (leading dims mapped
+    sequentially — NS already saturates the MXU per matrix)."""
+    fn = functools.partial(_ns.ns_step, a=a, b=b, c=c, interpret=_interpret())
+    if x.ndim == 2:
+        return fn(x)
+    lead = x.shape[:-2]
+    flat = x.reshape((-1,) + x.shape[-2:])
+    out = jax.lax.map(fn, flat)
+    return out.reshape(lead + x.shape[-2:])
+
+
+def matmul(a, b):
+    """Tiled fp32-accumulating matmul (2-D operands)."""
+    return _mm.matmul(a, b, interpret=_interpret())

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh, record memory / cost / collective
+statistics as JSON artifacts for the roofline analysis.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all          # every remaining cell
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.configs.all_archs import ASSIGNED
+from repro.core import cosine_with_warmup, mixed_optimizer
+from repro.distributed.sharding import axis_rules
+from repro.launch import mesh as mesh_lib
+from repro.launch.specs import input_specs
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(bf16|f16|f32|f64|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _result_bytes(line: str) -> int:
+    """Sum the bytes of the result shape(s) on an HLO line: the shapes
+    between '=' and the op call, e.g. '%ag = bf16[8,128]{1,0} all-gather('."""
+    if "=" in line:
+        head = line.split("=", 1)[1]
+        for op in _COLLECTIVES:
+            idx = head.find(f" {op}")
+            if idx > 0:
+                head = head[:idx]
+                break
+    else:
+        head = line
+    total = 0
+    for m in _SHAPE_RE.finditer(head):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    m = _GROUP_RE2.search(line)
+    if m:  # iota v2 format [num_groups,group_size]
+        return max(1, int(m.group(2)))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_chips: int):
+    """Per-op-type byte totals + a wire-byte estimate per chip."""
+    stats = {k: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        body = ls.split("=", 1)[1] if "=" in ls else ls
+        for op in _COLLECTIVES:
+            if re.search(rf"\b{op}(-start|-done)?\(", body):
+                if f"{op}-done(" in body:
+                    continue  # counted at -start
+                b = _result_bytes(line)
+                g = _group_size(line, 16)
+                if op == "all-gather":
+                    wire = b * (g - 1) / g
+                elif op == "all-reduce":
+                    wire = 2 * b * (g - 1) / g
+                elif op == "reduce-scatter":
+                    wire = b * (g - 1)      # result is the shard
+                elif op == "all-to-all":
+                    wire = b * (g - 1) / g
+                else:  # collective-permute
+                    wire = b
+                stats[op]["count"] += 1
+                stats[op]["result_bytes"] += b
+                stats[op]["wire_bytes"] += wire
+                break
+    total_wire = sum(s["wire_bytes"] for s in stats.values())
+    return stats, total_wire
+
+
+def model_flops(cfg, shape) -> float:
+    """6 * N_active * D (training) or 2 * N_active * D (per-token inference)."""
+    from repro.launch.roofline import active_params
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    if not ok:
+        return {"cell": tag, "status": "skipped", "reason": why}
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    with mesh, axis_rules(mesh):
+        args_sds, in_sh = input_specs(cfg, shape, mesh)
+        if shape.kind == "train":
+            opt = mixed_optimizer("rmnp", cosine_with_warmup(2e-3, 10_000),
+                                  cosine_with_warmup(3e-4, 10_000))
+            # 4 microbatches: bounds per-device activation memory (saved scan
+            # residuals + loss chunks) at train_4k scale; see DESIGN.md
+            fn = make_train_step(cfg, opt, num_microbatches=4)
+            donate = (0, 1)
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(cfg)
+            donate = ()
+        else:
+            fn = make_serve_step(cfg)
+            donate = (1,)
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll, wire = parse_collectives(hlo, n_chips)
+    # trip-count-aware analysis (scan bodies multiplied); see hlo_cost.py
+    from repro.launch.hlo_cost import analyze_hlo
+    hc = analyze_hlo(hlo, default_group=16)
+
+    rec = {
+        "cell": tag,
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": list(mesh.shape.values()),
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
+                                    + getattr(mem, "argument_size_in_bytes", 0)
+                                    + getattr(mem, "output_size_in_bytes", 0)
+                                    - getattr(mem, "alias_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        },
+        "collectives": coll,
+        "collective_wire_bytes": wire,
+        # loop-aware totals — the roofline reads these, not cost_analysis()
+        # (XLA counts while bodies once; scanned stacks undercount by ~n_layers)
+        "hlo_cost": {
+            "flops": hc["flops"],
+            "bytes_accessed": hc["bytes_accessed"],
+            "transcendentals": hc["transcendentals"],
+            "collectives": hc["collectives"],
+            "collective_wire_bytes": hc["collective_wire_bytes"],
+        },
+        "model_flops": model_flops(cfg, shape),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    import gzip
+    with gzip.open(out_dir / f"{tag}.hlo.gz", "wt") as f:
+        f.write(hlo)  # re-analyzable without recompiling
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+        path = out_dir / f"{tag}.json"
+        if path.exists() and args.all:
+            print(f"[dryrun] {tag}: cached")
+            continue
+        try:
+            rec = run_cell(arch, shape, mp, out_dir)
+            if rec["status"] == "ok":
+                m = rec["memory"]["bytes_per_device"] / 2**30
+                print(f"[dryrun] {tag}: OK mem={m:.2f}GiB/dev "
+                      f"flops={rec['cost']['flops']:.3e} "
+                      f"compile={rec['compile_s']}s", flush=True)
+            else:
+                print(f"[dryrun] {tag}: SKIP ({rec['reason'][:60]})", flush=True)
+                out_dir.mkdir(parents=True, exist_ok=True)
+                path.write_text(json.dumps(rec, indent=1))
+        except Exception:
+            failures += 1
+            print(f"[dryrun] {tag}: FAIL", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

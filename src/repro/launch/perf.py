@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Perf-iteration driver (§Perf hillclimbing).
+
+Compiles one (arch x shape) cell with config / step / sharding overrides
+and reports the three roofline terms, so each hypothesis -> change ->
+measure cycle is one invocation:
+
+    python -m repro.launch.perf --arch qwen3-4b --shape train_4k \
+        --tag H1_chunked --set attn_impl=chunked attn_chunk_q=1024 \
+        --microbatches 4 --optimizer rmnp [--remat dots] [--grad-dtype bfloat16] \
+        [--rules kv_seq=model seq=...]
+
+Artifacts land in artifacts/perf/<arch>__<shape>__<tag>.json and are
+summarized by benchmarks/roofline_report.py --dir artifacts/perf.
+"""
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.core import cosine_with_warmup, mixed_optimizer
+from repro.distributed.sharding import axis_rules
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.roofline import roofline_row
+from repro.launch.specs import input_specs
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "perf"
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out
+
+
+def compile_cell(arch: str, shape_name: str, *, cfg_overrides=None,
+                 optimizer: str = "rmnp", microbatches: int = 4,
+                 remat: str = "full", grad_dtype=None, rules=None,
+                 multi_pod: bool = False):
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg_overrides = dict(cfg_overrides)
+        # nested MoE knob: --set moe_dispatch=per_row
+        md = cfg_overrides.pop("moe_dispatch", None)
+        if md is not None and cfg.moe is not None:
+            cfg_overrides["moe"] = dataclasses.replace(cfg.moe, dispatch=md)
+        if cfg_overrides:
+            cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh, axis_rules(mesh, rules):
+        args_sds, in_sh = input_specs(cfg, shape, mesh)
+        if shape.kind == "train":
+            opt = mixed_optimizer(optimizer, cosine_with_warmup(2e-3, 10_000),
+                                  cosine_with_warmup(3e-4, 10_000))
+            fn = make_train_step(cfg, opt, num_microbatches=microbatches,
+                                 remat=remat, grad_dtype=grad_dtype)
+            donate = (0, 1)
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(cfg)
+            donate = ()
+        else:
+            fn = make_serve_step(cfg)
+            donate = (1,)
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           donate_argnums=donate).lower(*args_sds).compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    hc = analyze_hlo(hlo, default_group=16)
+    return cfg, shape, mesh, compiled, mem, hc, compile_s, hlo
+
+
+def run(arch, shape_name, tag, save_hlo=False, profile=False, **kw):
+    from repro.launch.dryrun import model_flops
+    cfg, shape, mesh, compiled, mem, hc, compile_s, hlo = compile_cell(
+        arch, shape_name, **kw)
+    n_chips = mesh.devices.size
+    rec = {
+        "cell": f"{arch}__{shape_name}__{tag}",
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "tag": tag,
+        "overrides": {k: str(v) for k, v in (kw.get("cfg_overrides") or {}).items()},
+        "optimizer": kw.get("optimizer", "rmnp"),
+        "microbatches": kw.get("microbatches", 4),
+        "remat": kw.get("remat", "full"),
+        "n_chips": int(n_chips),
+        "compile_s": round(compile_s, 1),
+        "memory": {"bytes_per_device": int(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0))},
+        "cost": {"flops": hc["flops"], "bytes_accessed": hc["bytes_accessed"]},
+        "hlo_cost": hc,
+        "collective_wire_bytes": hc["collective_wire_bytes"],
+        "model_flops": model_flops(cfg, shape),
+    }
+    row = roofline_row(rec)
+    rec["roofline"] = row
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / f"{rec['cell']}.json").write_text(json.dumps(rec, indent=1))
+    if save_hlo:
+        import gzip
+        with gzip.open(ARTIFACTS / f"{rec['cell']}.hlo.gz", "wt") as f:
+            f.write(hlo)
+    if profile:
+        from repro.launch.hlo_cost import breakdown
+        agg, top = breakdown(hlo, default_group=16)
+        print("-- per-opcode HBM traffic (GiB) --")
+        for k, v in sorted(agg.items(), key=lambda kv: -kv[1])[:10]:
+            print(f"  {k:25s} {v / 2**30:10.1f}")
+        print("-- top traffic ops --")
+        for b, oc, raw in top:
+            print(f"  {b / 2**30:9.1f} GiB  {raw[:150]}")
+        coll = hc["collectives"]
+        print("-- collectives (wire GiB) --")
+        for k, v in sorted(coll.items(), key=lambda kv: -kv[1]["wire_bytes"]):
+            if v["count"]:
+                print(f"  {k:20s} n={v['count']:<8.0f} {v['wire_bytes'] / 2**30:10.1f}")
+    print(f"[perf] {rec['cell']}: t_comp={row['t_compute_s']:.3f}s "
+          f"t_mem={row['t_memory_s']:.3f}s t_coll={row['t_collective_s']:.3f}s "
+          f"dominant={row['dominant']} roofline={row['roofline_fraction']:.4f} "
+          f"mem={rec['memory']['bytes_per_device'] / 2**30:.2f}GiB "
+          f"(compile {compile_s:.0f}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", nargs="*", default=None,
+                    help="ModelConfig overrides k=v")
+    ap.add_argument("--rules", nargs="*", default=None,
+                    help="sharding rule overrides logical=mesh_axis")
+    ap.add_argument("--optimizer", default="rmnp")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--grad-dtype", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--profile", action="store_true")
+    args = ap.parse_args()
+    rules = None
+    if args.rules:
+        rules = {}
+        for p in args.rules:
+            k, v = p.split("=", 1)
+            rules[k] = None if v in ("none", "None", "") else v
+    run(args.arch, args.shape, args.tag,
+        save_hlo=args.save_hlo, profile=args.profile,
+        cfg_overrides=_parse_overrides(args.set) or None,
+        optimizer=args.optimizer, microbatches=args.microbatches,
+        remat=args.remat, grad_dtype=args.grad_dtype, rules=rules,
+        multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

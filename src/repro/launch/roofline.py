@@ -1,0 +1,120 @@
+"""Roofline analysis from dry-run artifacts (single-pod mesh).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_wire_bytes / (chips * link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (which reports
+whole-program totals for the SPMD program, i.e. per-chip values multiplied
+by chip count is NOT applied — XLA reports per-module numbers for the
+partitioned module, so they are per-chip already).  Collective bytes are
+parsed from the post-optimization HLO (see dryrun.parse_collectives).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def active_params(cfg) -> float:
+    """Matmul-active parameter count (MoE: routed experts scaled by top_k/E)."""
+    from repro.models.layers import ParamSpec
+    from repro.models.model import build_param_specs
+    import jax
+
+    moe_frac = 1.0
+    if cfg.moe:
+        moe_frac = cfg.moe.top_k / cfg.moe.num_experts
+
+    total = 0.0
+
+    def visit(path, sp):
+        nonlocal total
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        n = math.prod(sp.shape)
+        if "embed" in keys and not cfg.tie_embeddings:
+            return sp  # gather only, no matmul flops
+        if "ffn/w_in" in keys and sp.shape[-3:-2] and cfg.moe and \
+                len(sp.shape) >= 3 and sp.shape[-3] == cfg.moe.num_experts:
+            n *= moe_frac
+        elif "ffn/w_out" in keys and cfg.moe and \
+                len(sp.shape) >= 3 and sp.shape[-3] == cfg.moe.num_experts:
+            n *= moe_frac
+        total += n
+        return sp
+
+    jax.tree_util.tree_map_with_path(
+        visit, build_param_specs(cfg),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+    return total
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = rec["n_chips"]
+    # loop-aware per-device totals (hlo_cost); cost_analysis() undercounts
+    # scan bodies (counted once, not x trip count) — see hlo_cost.py
+    src = rec.get("hlo_cost", rec["cost"])
+    wire = src.get("collective_wire_bytes", rec["collective_wire_bytes"])
+    t_compute = src["flops"] / PEAK_FLOPS_BF16
+    t_memory = src["bytes_accessed"] / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    # useful-flops ratio: MODEL_FLOPS is global; HLO flops per chip * chips
+    hlo_global = src["flops"] * chips
+    useful = rec["model_flops"] / hlo_global if hlo_global else 0.0
+    # roofline fraction: ideal compute time / achievable step time (max of terms)
+    ideal = rec["model_flops"] / (chips * PEAK_FLOPS_BF16)
+    step = max(terms.values())
+    return {
+        "cell": rec["cell"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": rec["model_flops"],
+        "useful_flops_ratio": useful,
+        "roofline_fraction": (ideal / step) if step else 0.0,
+        "mem_gib_per_dev": rec["memory"]["bytes_per_device"] / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(ARTIFACTS))
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+    for f in sorted(Path(args.dir).glob("*__single.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            rows.append({"cell": rec["cell"], "skipped": rec.get("reason", "")})
+            continue
+        rows.append(roofline_row(rec))
+
+    if args.markdown:
+        print("| cell | t_comp (s) | t_mem (s) | t_coll (s) | dominant | "
+              "useful-FLOPs | roofline frac | GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if "skipped" in r:
+                print(f"| {r['cell']} | — | — | — | skipped | — | — | — |")
+                continue
+            print(f"| {r['cell']} | {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} | "
+                  f"{r['t_collective_s']:.4f} | {r['dominant']} | "
+                  f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+                  f"{r['mem_gib_per_dev']:.2f} |")
+    else:
+        print(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

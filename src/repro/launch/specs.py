@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct stand-ins + NamedShardings for every model input, the
+parameter tree and the optimizer state — weak-type-correct, shardable, no
+device allocation.  Used by the dry-run and the roofline analysis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.mixed import is_matrix_param
+from repro.core.types import map_with_path
+from repro.distributed.sharding import spec_for
+from repro.models.layers import ParamSpec
+from repro.models.model import build_cache_specs, build_param_specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _from_specs(specs, mesh: Mesh, default_dtype) -> Tuple[Any, Any]:
+    """(SDS tree, NamedSharding tree) from a ParamSpec tree."""
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    sds = jax.tree_util.tree_map(
+        lambda sp: _sds(sp.shape, sp.dtype or default_dtype), specs, is_leaf=is_spec)
+    sh = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, spec_for(sp.shape, sp.axes, mesh)),
+        specs, is_leaf=is_spec)
+    return sds, sh
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    return _from_specs(build_param_specs(cfg), mesh, cfg.dtype)
+
+
+def opt_state_specs(cfg: ModelConfig, mesh: Mesh, matrix_embed: bool = True):
+    """MixedState(momentum, nu) SDS + shardings mirroring parameter sharding."""
+    from repro.core.mixed import MixedState
+    p_sds, p_sh = param_specs(cfg, mesh)
+    mom_sds = jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, jnp.float32), p_sds)
+    nu_sds = map_with_path(
+        lambda path, s: _sds((1,) * len(s.shape) if is_matrix_param(path, s, matrix_embed)
+                             else s.shape, jnp.float32), p_sds)
+    def _nu_sh(path, s, sh):
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        return NamedSharding(mesh, P()) if is_matrix_param(keys, s, matrix_embed) else sh
+
+    nu_sh = jax.tree_util.tree_map_with_path(_nu_sh, p_sds, p_sh)
+    # momentum shares the param sharding exactly
+    return (MixedState(momentum=mom_sds, nu=nu_sds),
+            MixedState(momentum=p_sh, nu=nu_sh))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Training / prefill batch inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    batch_axes = ("batch",)
+    sh = lambda shp, names: NamedSharding(mesh, spec_for(shp, names, mesh))
+    out_sds: Dict[str, Any] = {}
+    out_sh: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        out_sds["frames"] = _sds((B, S, cfg.d_model), cfg.dtype)
+        out_sh["frames"] = sh((B, S, cfg.d_model), ("batch", "seq", "embed"))
+    else:
+        out_sds["tokens"] = _sds((B, S), jnp.int32)
+        out_sh["tokens"] = sh((B, S), batch_axes + (None,))
+        if cfg.frontend == "vision":
+            nf = cfg.n_frontend_tokens
+            out_sds["vision_embeds"] = _sds((B, nf, cfg.d_model), cfg.dtype)
+            out_sh["vision_embeds"] = sh((B, nf, cfg.d_model), ("batch", None, "embed"))
+    if shape.kind == "train":
+        out_sds["labels"] = _sds((B, S), jnp.int32)
+        out_sh["labels"] = sh((B, S), batch_axes + (None,))
+    return out_sds, out_sh
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    specs = build_cache_specs(cfg, shape.global_batch, shape.seq_len)
+    return _from_specs(specs, mesh, cfg.dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """All step-function inputs for the given (arch x shape) cell.
+
+    Returns (args_sds, in_shardings) tuples ordered per the step signature.
+    """
+    p_sds, p_sh = param_specs(cfg, mesh)
+    if shape.kind == "train":
+        o_sds, o_sh = opt_state_specs(cfg, mesh)
+        b_sds, b_sh = batch_specs(cfg, shape, mesh)
+        step = _sds((), jnp.int32)
+        return (p_sds, o_sds, b_sds, step), (p_sh, o_sh, b_sh, None)
+    if shape.kind == "prefill":
+        b_sds, b_sh = batch_specs(cfg, shape, mesh)
+        return (p_sds, b_sds), (p_sh, b_sh)
+    # decode
+    c_sds, c_sh = cache_specs(cfg, shape, mesh)
+    B = shape.global_batch
+    tok_sds = _sds((B, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, spec_for((B, 1), ("batch", None), mesh))
+    pos = _sds((), jnp.int32)
+    return (p_sds, c_sds, tok_sds, pos), (p_sh, c_sh, tok_sh, None)

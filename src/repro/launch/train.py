@@ -1,0 +1,135 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --reduced \
+        --optimizer rmnp --steps 200 --batch 8 --seq 128
+
+Wires together: config -> mesh (whatever devices exist) -> synthetic data ->
+mixed optimizer -> pjit train step -> checkpoint manager (resume on restart)
+-> metrics log (loss, grad-norm, clip rate, preconditioner diagonal-dominance
+ratios).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.core import cosine_with_warmup, global_dominance, mixed_optimizer
+from repro.data.pipeline import make_stream
+from repro.distributed.sharding import axis_rules
+from repro.launch.mesh import make_local_mesh
+from repro.models import init_params
+from repro.train.step import make_train_step
+
+
+def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
+          batch: int = 8, seq: int = 128, lr_matrix: float = 2e-3,
+          lr_adamw: float = 1e-3, reduced: bool = True, seed: int = 0,
+          ckpt_dir: str = "", ckpt_every: int = 0, log_every: int = 10,
+          dominance_every: int = 0, matrix_embed: bool = True,
+          use_kernel: bool = False, log_file: str = "",
+          stop_at: int = 0):
+    """``stop_at`` simulates a crash: train to that step (schedules still
+    span ``steps``) and exit WITHOUT the final checkpoint."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+
+    opt = mixed_optimizer(
+        optimizer,
+        cosine_with_warmup(lr_matrix, steps),
+        cosine_with_warmup(lr_adamw, steps),
+        matrix_embed=matrix_embed,
+        use_kernel=use_kernel,
+    )
+    step_fn = make_train_step(cfg, opt, remat="none" if reduced else "full")
+    mesh = make_local_mesh(data=len(jax.devices()))
+
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    start_step, data_step = 0, 0
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr is not None:
+        restored = mgr.restore_latest((params, opt_state))
+        if restored is not None:
+            (params, opt_state), start_step, data_step = restored
+            print(f"[train] resumed from step {start_step}")
+
+    stream = make_stream(cfg, seq, batch, seed=seed, start_step=data_step)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    history = []
+    t0 = time.time()
+    end_step = min(steps, stop_at) if stop_at else steps
+    with mesh, axis_rules(mesh):
+        for step in range(start_step, end_step):
+            np_batch = next(stream)
+            jbatch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+            params, opt_state, metrics = jit_step(
+                params, opt_state, jbatch, jnp.int32(step))
+            if log_every and (step % log_every == 0 or step == steps - 1):
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = round(time.time() - t0, 2)
+                if dominance_every and step % dominance_every == 0 and \
+                        optimizer in ("rmnp", "muon"):
+                    dom = global_dominance(opt_state.momentum)
+                    m.update({k: float(v) for k, v in dom.items()})
+                history.append(m)
+                print(f"[train] step={step} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.3f} clip={m['clip_rate']:.0f}"
+                      + (f" r_avg={m['r_avg']:.2f}" if "r_avg" in m else ""),
+                      flush=True)
+            if mgr is not None and ckpt_every and (step + 1) % ckpt_every == 0:
+                mgr.save(step + 1, (params, opt_state), data_step=stream.step)
+    if mgr is not None and end_step == steps:
+        mgr.save(steps, (params, opt_state), data_step=stream.step, block=True)
+        mgr.wait()
+    elif mgr is not None:
+        mgr.wait()  # crash simulation: last periodic checkpoint survives
+    if log_file:
+        Path(log_file).parent.mkdir(parents=True, exist_ok=True)
+        Path(log_file).write_text(json.dumps(history, indent=1))
+    return params, opt_state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--optimizer", default="rmnp", choices=["rmnp", "muon", "adamw"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr-matrix", type=float, default=2e-3)
+    ap.add_argument("--lr-adamw", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true", help="full-size config")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--dominance-every", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--no-matrix-embed", action="store_true",
+                    help="AdamW on LM-head/embeddings (paper App D.4 ablation)")
+    ap.add_argument("--stop-at", type=int, default=0,
+                    help="simulate a crash at this step (schedules span --steps)")
+    ap.add_argument("--log-file", default="")
+    args = ap.parse_args()
+    train(args.arch, args.optimizer, args.steps, args.batch, args.seq,
+          args.lr_matrix, args.lr_adamw, reduced=not args.full,
+          seed=args.seed, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+          log_every=args.log_every, dominance_every=args.dominance_every,
+          matrix_embed=not args.no_matrix_embed,
+          use_kernel=args.use_kernel, log_file=args.log_file,
+          stop_at=args.stop_at)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    build_cache_specs,
+    build_param_specs,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    plan_stack,
+)

@@ -1,0 +1,213 @@
+"""Mixture-of-Experts FFN with top-k routing, capacity-bounded scatter
+dispatch (no (N, E, C) one-hot — the dispatch buffer is (E, C, d), sharded
+over the expert axis), load-balance + router-z auxiliary losses, and optional
+shared experts (DeepSeek-V2 style)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical
+from repro.models.layers import ParamSpec, rms_norm
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    m = cfg.moe
+    specs = {
+        "norm": ParamSpec((d,), ("embed",), "ones"),
+        "router": ParamSpec((d, m.num_experts), ("d_in", None)),
+        "w_in": ParamSpec((m.num_experts, d, 2 * m.d_ff_expert),
+                          ("expert", "d_in", None)),
+        "w_out": ParamSpec((m.num_experts, m.d_ff_expert, d),
+                           ("expert", None, "d_in")),
+    }
+    if m.num_shared:
+        ffs = m.d_ff_expert * m.num_shared
+        specs["w_in_shared"] = ParamSpec((d, 2 * ffs), ("d_in", "mlp"))
+        specs["w_out_shared"] = ParamSpec((ffs, d), ("mlp", "d_in"))
+    return specs
+
+
+def _capacity(n_tokens: int, m) -> int:
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8, floor of 8
+
+
+def _route(cfg: ModelConfig, p, xf):
+    """xf: (..., N, d) -> (gate_vals, expert_ids, aux)."""
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    logits = (xf @ p["router"]).astype(jnp.float32)            # (..., N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (..., N, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+    # load balance (Switch): E * sum_e mean(route_frac_e) * mean(prob_e)
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)
+    route_frac = jnp.mean(jnp.sum(onehot, axis=-2),
+                          axis=tuple(range(onehot.ndim - 2)))  # (E,)
+    prob_mean = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = m.aux_coef * E * jnp.sum(route_frac * prob_mean)
+    aux = aux + m.router_z_coef * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return gate_vals, expert_ids, aux
+
+
+def _dispatch_global(cfg, p, xf, x_dtype):
+    """One global capacity buffer.  Simple, but scattering from the
+    data-sharded token axis costs a dense (E, C, d) all-reduce."""
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    N, d = xf.shape
+    C = _capacity(N, m)
+    gate_vals, expert_ids, aux = _route(cfg, p, xf)
+
+    # position of each (token, k) within its expert, in routing order
+    flat_ids = expert_ids.reshape(N * K)                       # token-major
+    flat_gates = gate_vals.reshape(N * K)
+    oh = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)          # (N*K, E)
+    pos_in_expert = jnp.cumsum(oh, axis=0) - oh                # exclusive cumsum
+    pos = jnp.sum(pos_in_expert * oh, axis=-1)                 # (N*K,)
+    keep = pos < C
+    dest = jnp.where(keep, flat_ids * C + pos, E * C)          # overflow -> dummy
+
+    token_idx = jnp.repeat(jnp.arange(N), K)
+    buf = jnp.zeros((E * C + 1, d), xf.dtype).at[dest].add(xf[token_idx])
+    buf = buf[:-1].reshape(E, C, d)
+    buf = logical(buf, ("expert", None, "embed"))
+
+    gu = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    gate_h, up = jnp.split(gu, 2, axis=-1)
+    act = (jax.nn.silu(gate_h.astype(jnp.float32)) * up.astype(jnp.float32)).astype(x_dtype)
+    out = jnp.einsum("ecf,efd->ecd", act, p["w_out"])
+    out = logical(out, ("expert", None, "embed"))
+    out_flat = out.reshape(E * C, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((1, d), out_flat.dtype)], axis=0)
+
+    gathered = out_flat[dest] * (flat_gates * keep)[:, None].astype(out_flat.dtype)
+    y = jnp.zeros((N, d), x_dtype).at[token_idx].add(gathered)
+    return y, aux
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _scatter_from_tokens(h, dest, tok_buf, E, C, S_static):
+    """(B,S,d) tokens -> (B,E*C,d) expert slots (per-row capacity).
+
+    The VJP is handwritten (§Perf B5): autodiff's transpose materializes a
+    (B, S*K, d) cotangent gathered from the expert-sharded buffer — a dense
+    all-reduce over the expert axis.  The hand-written backward scatters
+    the slot cotangents straight into token order via ``tok_buf`` (the
+    slot -> token map), so the cross-shard sum is one (B,S,d) reduction,
+    exactly mirroring the expert-side combine.
+    """
+    B, S, d = h.shape
+    SK = dest.shape[1]
+    token_idx = jnp.arange(SK, dtype=jnp.int32) // (SK // S)
+
+    def row(dest_row, h_row):
+        src = h_row[token_idx]
+        return jnp.zeros((E * C + 1, d), h_row.dtype).at[dest_row].add(src)
+
+    return jax.vmap(row)(dest, h)[:, :-1]
+
+
+def _scatter_fwd(h, dest, tok_buf, E, C, S_static):
+    return _scatter_from_tokens(h, dest, tok_buf, E, C, S_static), tok_buf
+
+
+def _scatter_bwd(E, C, S_static, tok_buf, g):
+    d = g.shape[-1]
+
+    def row(tok_row, g_row):
+        return jnp.zeros((S_static + 1, d), g.dtype).at[tok_row].add(g_row)[:S_static]
+
+    dh = jax.vmap(row)(tok_buf, g)
+    dh = logical(dh, ("batch", None, "embed"))
+    return dh, None, None
+
+
+_scatter_from_tokens.defvjp(_scatter_fwd, _scatter_bwd)
+
+
+def _dispatch_per_row(cfg, p, h, x_dtype):
+    """Per-batch-row capacity buffers (EXPERIMENTS.md §Perf).
+
+    The buffer is (B, E, C_row, d) with batch -> data and expert -> model:
+    the scatter is local to each batch row, and the only collective is the
+    batch/expert reshard of the (much smaller) per-row buffer, which GSPMD
+    lowers to an all-to-all instead of the global variant's dense
+    all-reduce.  Capacity is per row (per-sequence), a standard variant.
+    """
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    B, S, d = h.shape
+    C = _capacity(S, m)
+    gate_vals, expert_ids, aux = _route(cfg, p, h)             # (B,S,K)
+
+    flat_ids = expert_ids.reshape(B, S * K)
+    flat_gates = gate_vals.reshape(B, S * K)
+    oh = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)          # (B, S*K, E)
+    pos_in_expert = jnp.cumsum(oh, axis=1) - oh
+    pos = jnp.sum(pos_in_expert * oh, axis=-1)                 # (B, S*K)
+    keep = pos < C
+    dest = jnp.where(keep, flat_ids * C + pos, E * C)          # (B, S*K)
+
+    token_idx = jnp.repeat(jnp.arange(S), K)                   # (S*K,)
+
+    # slot -> (gate, token) maps, shared by dispatch-bwd and combine
+    def slot_maps_pre(dest_row, gates_row):
+        gate_buf = jnp.zeros((E * C + 1,), jnp.float32).at[dest_row].add(gates_row)
+        tok_buf = jnp.full((E * C + 1,), S, jnp.int32).at[dest_row].set(token_idx)
+        return gate_buf[:E * C], tok_buf[:E * C]
+
+    gate_buf, tok_buf = jax.vmap(slot_maps_pre)(dest, flat_gates * keep)
+
+    buf = _scatter_from_tokens(h, dest, tok_buf, E, C, S).reshape(B, E, C, d)
+    buf = logical(buf, ("batch", "expert", None, "embed"))
+
+    gu = jnp.einsum("becd,edf->becf", buf, p["w_in"])
+    gate_h, up = jnp.split(gu, 2, axis=-1)
+    act = jax.nn.silu(gate_h) * up
+    out = jnp.einsum("becf,efd->becd", act.astype(x_dtype), p["w_out"])
+    out = logical(out, ("batch", "expert", None, "embed"))
+    out_flat = out.reshape(B, E * C, d)
+
+    # ---- expert-side combine (§Perf B3) ----------------------------------
+    # Gathering token-ordered rows from the expert-sharded out_flat costs a
+    # dense (B, S*K, d) all-reduce over the expert axis fwd + bwd.  Instead,
+    # weight slots by their gates *in buffer layout* and scatter-add them
+    # straight into (B, S, d): each expert shard contributes only its own
+    # slots, so the cross-shard sum is one (B, S, d) bf16 all-reduce.
+    weighted = out_flat * gate_buf[..., None].astype(out_flat.dtype)
+
+    def combine_row(tok_row, w_row):
+        return jnp.zeros((S + 1, d), x_dtype).at[tok_row].add(w_row)[:S]
+
+    y = jax.vmap(combine_row)(tok_buf, weighted)
+    y = logical(y, ("batch", None, "embed"))
+    return y.reshape(B * S, d), aux
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    m = cfg.moe
+    h = rms_norm(x, p["norm"], cfg.rms_eps)
+    if m.dispatch == "per_row":
+        y, aux = _dispatch_per_row(cfg, p, h, x.dtype)
+    else:
+        y, aux = _dispatch_global(cfg, p, h.reshape(B * S, d), x.dtype)
+    xf = h.reshape(B * S, d)
+
+    if m.num_shared:
+        gu_s = xf @ p["w_in_shared"]
+        g_s, u_s = jnp.split(gu_s, 2, axis=-1)
+        y = y + ((jax.nn.silu(g_s.astype(jnp.float32)) * u_s.astype(jnp.float32))
+                 .astype(x.dtype) @ p["w_out_shared"])
+
+    y = y.reshape(B, S, d)
+    return logical(y, ("batch", "res_seq", "embed")), aux

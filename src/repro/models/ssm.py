@@ -1,0 +1,346 @@
+"""Sequence-mixing state-space blocks: Mamba (S6), mLSTM and sLSTM (xLSTM).
+
+TPU adaptation notes (see DESIGN.md):
+  * Mamba's selective scan is computed chunkwise — an associative scan inside
+    fixed-size chunks (MXU/VPU friendly, bounded VMEM working set) with the
+    recurrent state carried across chunks by a lax.scan, the chunk body under
+    jax.checkpoint so the (C, d_inner, d_state) expansion is never saved for
+    backward.
+  * mLSTM uses the chunkwise-parallel (GLA-style) form: intra-chunk masked
+    attention with log-space decay ratios + inter-chunk (hd x hd) state
+    recurrence.
+  * sLSTM is inherently sequential (the paper's point) — lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical
+from repro.models.layers import ParamSpec, rms_norm
+
+# ---------------------------------------------------------------------------
+# Mamba (S6)
+# ---------------------------------------------------------------------------
+
+_MAMBA_CHUNK = 64
+
+
+def _mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, s.d_state, s.d_conv
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, dt_rank, d_state, d_conv = _mamba_dims(cfg)
+    return {
+        "norm": ParamSpec((d,), ("embed",), "ones"),
+        "in_proj": ParamSpec((d, 2 * d_inner), ("d_in", "d_inner")),
+        "conv_w": ParamSpec((d_conv, d_inner), (None, "d_inner"), "normal", 0.1),
+        "conv_bias": ParamSpec((d_inner,), ("d_inner",), "zeros"),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * d_state), ("d_inner", None)),
+        "dt_w": ParamSpec((dt_rank, d_inner), ("lora", "d_inner")),
+        "dt_bias": ParamSpec((d_inner,), ("d_inner",), "zeros"),
+        "A_log": ParamSpec((d_inner, d_state), ("d_inner", "state"), "normal", 0.5),
+        "D_skip": ParamSpec((d_inner,), ("d_inner",), "ones"),
+        "out_proj": ParamSpec((d_inner, d), ("d_inner", "d_in")),
+    }
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    d_inner, _, d_state, d_conv = _mamba_dims(cfg)
+    return {
+        "h": ParamSpec((batch, d_inner, d_state), ("batch", "d_inner", "state"), "zeros", dtype="float32"),
+        "conv": ParamSpec((batch, d_conv - 1, d_inner), ("batch", None, "d_inner"), "zeros"),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B,S,d_inner); w: (k,d_inner) depthwise. state: (B,k-1,d_inner)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return y, new_state
+
+
+def _mamba_scan_chunked(p, xc, dt_rank, d_state, h0):
+    """Chunked selective scan.  xc: (B,S,d_inner) conv+silu output.  The
+    (C, d_inner, d_state) expansion, projections and the associative scan all
+    live inside the (remat'd) chunk body, so only (B,C,d_inner) chunks are
+    ever saved — never the full (B,S,d_inner,d_state) tensor."""
+    B, S, di = xc.shape
+    C = min(_MAMBA_CHUNK, S)
+    if S % C:
+        C = S  # non-divisible (smoke shapes): single chunk
+    nC = S // C
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                   # (di,ds)
+    xs = jnp.moveaxis(xc.reshape(B, nC, C, di), 1, 0)              # (nC,B,C,di)
+
+    def chunk(h, xck):
+        proj = xck @ p["x_proj"]
+        dt, Bp, Cp = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+        dt = jax.nn.softplus((dt @ p["dt_w"] + p["dt_bias"]).astype(jnp.float32))
+        ac = jnp.exp(dt[..., None] * A)                            # (B,C,di,ds)
+        bc = (dt[..., None] * Bp[:, :, None, :].astype(jnp.float32)
+              * xck[..., None].astype(jnp.float32))
+
+        def comb(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        aa, bb = jax.lax.associative_scan(comb, (ac, bc), axis=1)
+        hs = aa * h[:, None] + bb                                  # (B,C,di,ds)
+        y = jnp.einsum("btds,bts->btd", hs, Cp.astype(jnp.float32))
+        return hs[:, -1], y
+
+    chunk = jax.checkpoint(chunk)
+    hN, ys = jax.lax.scan(chunk, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    return y, hN
+
+
+def mamba_apply(cfg: ModelConfig, p, x, positions, mode: str, cache=None, pos=None):
+    B, S, d = x.shape
+    d_inner, dt_rank, d_state, d_conv = _mamba_dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.rms_eps)
+    xz = h @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = logical(xin, ("batch", "seq", "d_inner"))
+
+    conv_state = cache["conv"] if mode == "decode" else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_bias"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    if mode == "decode":
+        proj = xc @ p["x_proj"]
+        dt, Bp, Cp = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+        dt = jax.nn.softplus((dt @ p["dt_w"] + p["dt_bias"]).astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        a = jnp.exp(dt[..., None] * A)
+        bterm = (dt[..., None] * Bp[:, :, None, :].astype(jnp.float32)
+                 * xc[..., None].astype(jnp.float32))
+        h_new = a[:, 0] * cache["h"] + bterm[:, 0]     # S == 1
+        y = jnp.einsum("bds,bs->bd", h_new, Cp[:, 0].astype(jnp.float32))[:, None]
+        new_cache = {"h": h_new, "conv": new_conv}
+    else:
+        h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+        y, hN = _mamba_scan_chunked(p, xc, dt_rank, d_state, h0)
+        new_cache = ({"h": hN, "conv": new_conv} if mode == "prefill" else None)
+
+    y = (y + p["D_skip"].astype(jnp.float32) * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return logical(out, ("batch", "res_seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block, chunkwise-parallel)
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_inner = int(cfg.ssm.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    hd = d_inner // H
+    return d_inner, H, hd
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, H, hd = _mlstm_dims(cfg)
+    return {
+        "norm": ParamSpec((d,), ("embed",), "ones"),
+        "in_proj": ParamSpec((d, 2 * d_inner), ("d_in", "d_inner")),  # [x; gate z]
+        "wq": ParamSpec((d_inner, d_inner), ("d_inner", None)),
+        "wk": ParamSpec((d_inner, d_inner), ("d_inner", None)),
+        "wv": ParamSpec((d_inner, d_inner), ("d_inner", None)),
+        "w_igate": ParamSpec((d_inner, H), ("d_inner", None), "normal", 0.01),
+        "igate_bias": ParamSpec((H,), (None,), "zeros"),
+        "w_fgate": ParamSpec((d_inner, H), ("d_inner", None), "normal", 0.01),
+        "fgate_bias": ParamSpec((H,), (None,), "ones"),
+        "head_norm": ParamSpec((d_inner,), ("d_inner",), "ones"),
+        "out_proj": ParamSpec((d_inner, d), ("d_inner", "d_in")),
+    }
+
+
+def mlstm_cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    _, H, hd = _mlstm_dims(cfg)
+    return {
+        "C": ParamSpec((batch, H, hd, hd), ("batch", "heads", None, None), "zeros", dtype="float32"),
+        "n": ParamSpec((batch, H, hd), ("batch", "heads", None), "zeros", dtype="float32"),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, i_gate, C0, n0, chunk: int):
+    """q,k,v: (B,S,H,hd); log_f: (B,S,H) log sigmoid forget; i_gate: (B,S,H).
+    Returns y (B,S,H,hd), final (C, n)."""
+    B, S, H, hd = q.shape
+    Cn = min(chunk, S)
+    if S % Cn:
+        Cn = S  # non-divisible (smoke shapes): single chunk
+    nC = S // Cn
+    r = lambda t: jnp.moveaxis(t.reshape(B, nC, Cn, *t.shape[2:]), 1, 0)
+    qs, ks, vs, lfs, igs = map(r, (q, k, v, log_f, i_gate))
+    scale = 1.0 / (hd ** 0.5)
+
+    def chunk_body(carry, inp):
+        C_prev, n_prev = carry          # (B,H,hd,hd), (B,H,hd)
+        qc, kc, vc, lf, ig = inp        # (B,Cn,H,...)
+        g = jnp.cumsum(lf, axis=1)      # log decay from chunk start, inclusive
+        # inter-chunk: q_t decayed by g_t applied to carried state
+        q_dec = qc * jnp.exp(g)[..., None] * scale
+        y_inter = jnp.einsum("bthd,bhde->bthe", q_dec, C_prev)
+        den_inter = jnp.einsum("bthd,bhd->bth", q_dec, n_prev)
+        # intra-chunk: D_ts = exp(g_t - g_s) * i_s, causal
+        decay = g[:, :, None, :] - g[:, None, :, :]          # (B,t,s,H)
+        tpos = jnp.arange(Cn)
+        causal = tpos[:, None] >= tpos[None, :]
+        w = jnp.where(causal[None, :, :, None],
+                      jnp.exp(decay) * jnp.exp(ig)[:, None, :, :], 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * scale
+        aw = scores * w
+        y_intra = jnp.einsum("btsh,bshd->bthd", aw, vc)
+        # den = q_t . n_t = sum_s w_ts (q_t . k_s) * scale = sum_s aw_ts
+        den_intra = aw.sum(axis=2)                           # (B,t,H)
+        # state update: decay to end of chunk
+        gC = g[:, -1]                                         # (B,H)
+        kv_w = jnp.exp(gC[:, None] - g + ig)                  # (B,Cn,H)
+        C_new = jnp.exp(gC)[:, :, None, None] * C_prev + jnp.einsum(
+            "bthd,bthe,bth->bhde", kc, vc, kv_w)
+        n_new = jnp.exp(gC)[:, :, None] * n_prev + jnp.einsum(
+            "bthd,bth->bhd", kc, kv_w)
+        y = (y_inter + y_intra) / (jnp.abs(den_inter + den_intra)[..., None] + 1.0)
+        return (C_new, n_new), y
+
+    chunk_body = jax.checkpoint(chunk_body)
+    (Cf, nf), ys = jax.lax.scan(chunk_body, (C0, n0), (qs, ks, vs, lfs, igs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y, Cf, nf
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, positions, mode: str, cache=None, pos=None):
+    B, S, d = x.shape
+    d_inner, H, hd = _mlstm_dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.rms_eps)
+    xz = h @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = logical(xin, ("batch", "seq", "d_inner"))
+
+    q = (xin @ p["wq"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xin @ p["wk"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xin @ p["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (xin @ p["w_fgate"] + p["fgate_bias"]).astype(jnp.float32))   # (B,S,H)
+    ig = jax.nn.log_sigmoid(
+        (xin @ p["w_igate"] + p["igate_bias"]).astype(jnp.float32))
+
+    if mode == "decode":
+        f1 = jnp.exp(log_f[:, 0])[..., None, None]
+        C_new = f1 * cache["C"] + jnp.exp(ig[:, 0])[..., None, None] * (
+            k[:, 0][..., :, None] * v[:, 0][..., None, :])
+        n_new = f1[..., 0] * cache["n"] + jnp.exp(ig[:, 0])[..., None] * k[:, 0]
+        qd = q[:, 0] / (hd ** 0.5)
+        y = jnp.einsum("bhd,bhde->bhe", qd, C_new)
+        den = jnp.einsum("bhd,bhd->bh", qd, n_new)
+        y = (y / (jnp.abs(den)[..., None] + 1.0))[:, None]
+        new_cache = {"C": C_new, "n": n_new}
+    else:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        y, Cf, nf = _mlstm_chunk_scan(q, k, v, log_f, ig, C0, n0, cfg.ssm.chunk_size)
+        new_cache = {"C": Cf, "n": nf} if mode == "prefill" else None
+
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y, p["head_norm"], cfg.rms_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return logical(out, ("batch", "res_seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory, sequential recurrence with per-head recurrent weights)
+# ---------------------------------------------------------------------------
+
+def _slstm_dims(cfg: ModelConfig):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return cfg.d_model, H, hd
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, H, hd = _slstm_dims(cfg)
+    ff = int(cfg.ssm.proj_factor * d)
+    return {
+        "norm": ParamSpec((d,), ("embed",), "ones"),
+        "w_gates": ParamSpec((d, 4 * d), ("d_in", "d_inner")),        # z,i,f,o
+        "r_gates": ParamSpec((H, hd, 4 * hd), ("heads", None, None),
+                             "normal", 0.05),                          # recurrent
+        "gate_bias": ParamSpec((4 * d,), ("d_inner",), "zeros"),
+        "head_norm": ParamSpec((d,), ("embed",), "ones"),
+        "up_proj": ParamSpec((d, 2 * ff), ("d_in", "mlp")),
+        "down_proj": ParamSpec((ff, d), ("mlp", "d_in")),
+    }
+
+
+def slstm_cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    d, H, hd = _slstm_dims(cfg)
+    return {
+        "h": ParamSpec((batch, H, hd), ("batch", "heads", None), "zeros", dtype="float32"),
+        "c": ParamSpec((batch, H, hd), ("batch", "heads", None), "zeros", dtype="float32"),
+    }
+
+
+def _slstm_step(p, carry, wx_t):
+    """wx_t: (B, 4d) precomputed input contribution; carry: (h, c) (B,H,hd)."""
+    h, c = carry
+    B, H, hd = h.shape
+    rec = jnp.einsum("bhd,hde->bhe", h, p["r_gates"])   # (B,H,4hd)
+    gates = wx_t.reshape(B, H, 4 * hd) + rec
+    z, i, f, o = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f + 1.0)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c + i * z
+    h_new = o * jnp.tanh(c_new)
+    return (h_new, c_new), h_new
+
+
+def slstm_apply(cfg: ModelConfig, p, x, positions, mode: str, cache=None, pos=None):
+    B, S, d = x.shape
+    _, H, hd = _slstm_dims(cfg)
+    hin = rms_norm(x, p["norm"], cfg.rms_eps)
+    wx = (hin @ p["w_gates"] + p["gate_bias"]).astype(jnp.float32)   # (B,S,4d)
+
+    if mode == "decode":
+        (h_new, c_new), y = _slstm_step(p, (cache["h"], cache["c"]), wx[:, 0])
+        y = y[:, None]
+        new_cache = {"h": h_new, "c": c_new}
+    else:
+        h0 = jnp.zeros((B, H, hd), jnp.float32)
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        (hf, cf), ys = jax.lax.scan(
+            lambda carry, w: _slstm_step(p, carry, w),
+            (h0, c0), jnp.moveaxis(wx, 1, 0))
+        y = jnp.moveaxis(ys, 0, 1)                      # (B,S,H,hd)
+        new_cache = {"h": hf, "c": cf} if mode == "prefill" else None
+
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = rms_norm(y, p["head_norm"], cfg.rms_eps)
+    # post up/down projection (xLSTM block FFN)
+    gu = y @ p["up_proj"]
+    g, u = jnp.split(gu, 2, axis=-1)
+    y = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["down_proj"]
+    return logical(out, ("batch", "res_seq", "embed")), new_cache

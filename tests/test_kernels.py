@@ -1,0 +1,179 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+with hypothesis shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.matmul import matmul as pallas_matmul
+from repro.kernels.ref import (
+    matmul_ref, ns_step_ref, rmnp_momentum_rownorm_ref,
+)
+from repro.kernels.rmnp_update import rmnp_momentum_rownorm_2d
+
+_NS = (3.4445, -4.7750, 2.0315)
+
+
+class TestRmnpKernel:
+    @pytest.mark.parametrize("shape", [(8, 8), (64, 128), (128, 64),
+                                       (300, 257), (1024, 96), (33, 9)])
+    def test_matches_ref(self, shape):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(shape[0] * shape[1]))
+        g = jax.random.normal(k1, shape)
+        v = jax.random.normal(k2, shape)
+        vn, d = rmnp_momentum_rownorm_2d(g, v, beta=0.95, interpret=True)
+        vr, dr = rmnp_momentum_rownorm_ref(g, v, beta=0.95)
+        np.testing.assert_allclose(np.array(vn), np.array(vr), atol=1e-5)
+        np.testing.assert_allclose(np.array(d), np.array(dr), atol=1e-5)
+
+    @given(st.integers(2, 200), st.integers(2, 200),
+           st.sampled_from([0.0, 0.5, 0.9, 0.95, 0.99]))
+    @settings(max_examples=12, deadline=None)
+    def test_property_sweep(self, m, n, beta):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(m * 211 + n))
+        g = jax.random.normal(k1, (m, n))
+        v = jax.random.normal(k2, (m, n))
+        vn, d = ops.rmnp_momentum_rownorm(g, v, beta=beta)
+        vr, dr = rmnp_momentum_rownorm_ref(g, v, beta=beta)
+        np.testing.assert_allclose(np.array(vn), np.array(vr), atol=1e-5)
+        np.testing.assert_allclose(np.array(d), np.array(dr), atol=1e-5)
+
+    def test_batched_stack(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 48))
+        v = jnp.zeros((4, 32, 48))
+        vn, d = ops.rmnp_momentum_rownorm(g, v, beta=0.9)
+        vr, dr = rmnp_momentum_rownorm_ref(g, v, beta=0.9)
+        np.testing.assert_allclose(np.array(d), np.array(dr), atol=1e-5)
+
+    def test_output_columns_unit_norm(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
+        v = jax.random.normal(jax.random.PRNGKey(1), (128, 256))
+        _, d = ops.rmnp_momentum_rownorm(g, v, beta=0.5)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.array(d), axis=0), 1.0, atol=1e-4)
+
+
+class TestMatmulKernel:
+    @pytest.mark.parametrize("m,k,n", [(8, 8, 8), (128, 256, 64),
+                                       (100, 200, 72), (257, 129, 33),
+                                       (512, 512, 512)])
+    def test_matches_ref(self, m, k, n):
+        a = jax.random.normal(jax.random.PRNGKey(m + k), (m, k))
+        b = jax.random.normal(jax.random.PRNGKey(n), (k, n))
+        out = pallas_matmul(a, b, interpret=True)
+        np.testing.assert_allclose(np.array(out), np.array(matmul_ref(a, b)),
+                                   rtol=1e-4, atol=1e-3)
+
+    @given(st.integers(4, 150), st.integers(4, 150), st.integers(4, 150))
+    @settings(max_examples=8, deadline=None)
+    def test_property_sweep(self, m, k, n):
+        a = jax.random.normal(jax.random.PRNGKey(m * 7 + k), (m, k))
+        b = jax.random.normal(jax.random.PRNGKey(n * 3), (k, n))
+        out = pallas_matmul(a, b, interpret=True)
+        np.testing.assert_allclose(np.array(out), np.array(matmul_ref(a, b)),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_bf16_inputs_fp32_accumulate(self):
+        a = jax.random.normal(jax.random.PRNGKey(0), (64, 64)).astype(jnp.bfloat16)
+        b = jax.random.normal(jax.random.PRNGKey(1), (64, 64)).astype(jnp.bfloat16)
+        out = pallas_matmul(a, b, interpret=True)
+        assert out.dtype == jnp.float32
+        np.testing.assert_allclose(np.array(out), np.array(matmul_ref(a, b)),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestNewtonSchulzKernel:
+    @pytest.mark.parametrize("shape", [(32, 32), (64, 128), (48, 96)])
+    def test_matches_ref(self, shape):
+        x = jax.random.normal(jax.random.PRNGKey(0), shape) / 20
+        out = ops.ns_step(x, *_NS)
+        ref = ns_step_ref(x, *_NS)
+        np.testing.assert_allclose(np.array(out), np.array(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_five_steps_orthogonalize(self):
+        v = jax.random.normal(jax.random.PRNGKey(1), (48, 64))
+        x = v / (jnp.linalg.norm(v) + 1e-7)
+        for _ in range(5):
+            x = ops.ns_step(x, *_NS)
+        s = np.linalg.svd(np.array(x), compute_uv=False)
+        assert s.min() > 0.3 and s.max() < 1.3
+
+
+class TestOptimizerKernelPath:
+    def test_mixed_rmnp_kernel_equals_jnp_path(self):
+        from repro.core import constant, mixed_optimizer
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 64))}
+        grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (32, 64))}
+        o1 = mixed_optimizer("rmnp", constant(0.1), constant(0.1))
+        o2 = mixed_optimizer("rmnp", constant(0.1), constant(0.1), use_kernel=True)
+        u1, _ = o1.update(grads, o1.init(params), params, 0)
+        u2, _ = o2.update(grads, o2.init(params), params, 0)
+        np.testing.assert_allclose(np.array(u1["w"]), np.array(u2["w"]), atol=1e-5)
+
+
+class TestFlashAttentionKernel:
+    def _rand(self, B, S, H, K, hd, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+        return q, k, v
+
+    @pytest.mark.parametrize("B,S,H,K,hd,bq,bk", [
+        (2, 256, 4, 2, 64, 64, 64),    # GQA 2:1
+        (1, 128, 4, 4, 32, 128, 32),   # MHA, single q block
+        (2, 128, 8, 1, 64, 32, 64),    # MQA
+        (1, 512, 2, 2, 128, 128, 256), # rectangular blocks
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_dense(self, B, S, H, K, hd, bq, bk, causal):
+        from repro.kernels.flash_attention import flash_attention_fwd
+        from repro.models.layers import _dense_attention
+        q, k, v = self._rand(B, S, H, K, hd, seed=S + H)
+        out = flash_attention_fwd(q, k, v, causal=causal, block_q=bq,
+                                  block_k=bk, interpret=True)
+        ref = _dense_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_bf16_io(self):
+        from repro.kernels.flash_attention import flash_attention_fwd
+        from repro.models.layers import _dense_attention
+        q, k, v = self._rand(1, 128, 4, 2, 64)
+        qb, kb, vb = (t.astype(jnp.bfloat16) for t in (q, k, v))
+        out = flash_attention_fwd(qb, kb, vb, causal=True, block_q=64,
+                                  block_k=64, interpret=True)
+        assert out.dtype == jnp.bfloat16
+        ref = _dense_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref), atol=3e-2, rtol=3e-2)
+
+    def test_gradients_flow_via_recompute_vjp(self):
+        from repro.kernels.flash_attention import flash_attention
+        from repro.models.layers import _dense_attention
+        q, k, v = self._rand(1, 128, 4, 2, 32, seed=3)
+
+        def f_flash(q, k, v):
+            return jnp.sum(flash_attention(q, k, v, True, 64, 64, True) ** 2)
+
+        def f_dense(q, k, v):
+            return jnp.sum(_dense_attention(q, k, v, causal=True) ** 2)
+
+        g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f_dense, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, rtol=1e-4)
+
+    def test_chunked_oracle_matches_dense(self):
+        from repro.kernels.ref import chunked_attention_ref
+        from repro.models.layers import _dense_attention
+        q, k, v = self._rand(2, 256, 4, 2, 64, seed=9)
+        out = chunked_attention_ref(q, k, v, causal=True, chunk_q=64,
+                                    chunk_k=128)
+        ref = _dense_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)

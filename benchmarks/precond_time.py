@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from benchmarks.common import print_table, time_fn, write_artifact
 from repro.core.muon import newton_schulz
 from repro.core.rmnp import row_normalize
+from repro.core.schedule import constant
 
 # GPT-2 scales of paper Table 4: name -> (layers, d_model)
 GPT2_SIZES = {
@@ -63,12 +64,36 @@ def optimizer_state_bytes(layers: int, d: int) -> Dict[str, float]:
             "rmnp_state_bytes": 4.0 * n_params}
 
 
-def bench_size(name: str, layers: int, d: int, ns_steps: int, iters: int) -> Dict:
+def bench_size(name: str, layers: int, d: int, ns_steps: int, iters: int,
+               derive: bool = True) -> Dict:
     key = jax.random.PRNGKey(0)
     muon_t = rmnp_t = 0.0
     muon_fl = rmnp_fl = 0.0
     muon_fn = jax.jit(lambda v: newton_schulz(v, steps=ns_steps))
     rmnp_fn = jax.jit(lambda v: row_normalize(v))
+    if not derive:
+        # un-derived (TPU) harness: one jitted pass applying the operator to
+        # every matrix in the model, timed directly
+        mats = []
+        for si, (shape, count) in enumerate(layer_matrix_shapes(d)):
+            for i in range(count * layers):
+                mats.append(jax.random.normal(
+                    jax.random.fold_in(key, si * 10007 + i), shape, jnp.float32))
+        muon_all = jax.jit(lambda ms: [newton_schulz(m, steps=ns_steps) for m in ms])
+        rmnp_all = jax.jit(lambda ms: [row_normalize(m) for m in ms])
+        muon_t = time_fn(muon_all, mats, iters=iters)
+        rmnp_t = time_fn(rmnp_all, mats, iters=iters)
+        for shape, count in layer_matrix_shapes(d):
+            muon_fl += count * layers * ns_flops(*shape, steps=ns_steps)
+            rmnp_fl += count * layers * rn_flops(*shape)
+        return {
+            "size": name, "layers": layers, "d_model": d, "derived": False,
+            "muon_100steps_s": 100 * muon_t,
+            "rmnp_100steps_s": 100 * rmnp_t,
+            "speedup": muon_t / rmnp_t if rmnp_t else float("inf"),
+            "flop_ratio": muon_fl / rmnp_fl,
+            **optimizer_state_bytes(layers, d),
+        }
     for shape, count in layer_matrix_shapes(d):
         v = jax.random.normal(key, shape, jnp.float32)
         t_m = time_fn(muon_fn, v, iters=iters)
@@ -78,12 +103,63 @@ def bench_size(name: str, layers: int, d: int, ns_steps: int, iters: int) -> Dic
         muon_fl += count * layers * ns_flops(*shape, steps=ns_steps)
         rmnp_fl += count * layers * rn_flops(*shape)
     return {
-        "size": name, "layers": layers, "d_model": d,
+        "size": name, "layers": layers, "d_model": d, "derived": True,
         "muon_100steps_s": 100 * muon_t,
         "rmnp_100steps_s": 100 * rmnp_t,
         "speedup": muon_t / rmnp_t if rmnp_t else float("inf"),
         "flop_ratio": muon_fl / rmnp_fl,
         **optimizer_state_bytes(layers, d),  # Table 3: identical memory
+    }
+
+
+def bench_fused(name: str, layers: int, d: int, iters: int) -> Dict:
+    """Shape-bucketed fused engine vs the per-leaf path: wall-clock per
+    optimizer step plus kernel launches per step.
+
+    Launches are counted by tracing the Pallas (``use_kernel=True``) update
+    and counting ``pallas_call`` equations — no execution, so it is exact
+    and free even on CPU.  Wall-clock is measured on the Pallas path on TPU
+    and on the XLA path on CPU (interpret-mode Pallas times the Python
+    interpreter, not the math)."""
+    from repro.core.rmnp import rmnp
+    from repro.train.step import optimizer_launches
+
+    key = jax.random.PRNGKey(0)
+    params, grads = {}, {}
+    for i in range(layers):
+        for si, (shape, count) in enumerate(layer_matrix_shapes(d)):
+            for c in range(count):
+                k = f"layer_{i}/m{si}_{c}"
+                params[k] = jnp.zeros(shape, jnp.float32)
+                grads[k] = jax.random.normal(
+                    jax.random.fold_in(key, i * 1009 + si * 31 + c),
+                    shape, jnp.float32)
+
+    on_tpu = jax.default_backend() == "tpu"
+    per_leaf = rmnp(constant(1e-3), use_kernel=on_tpu)
+    fused = rmnp(constant(1e-3), use_kernel=on_tpu, fused=True)
+    launches_leaf = optimizer_launches(rmnp(constant(1e-3), use_kernel=True), params)
+    launches_fused = optimizer_launches(
+        rmnp(constant(1e-3), use_kernel=True, fused=True), params)
+
+    def step_of(opt):
+        state = opt.init(params)
+        fn = jax.jit(lambda g, s, p: opt.update(g, s, p, 0))
+        return time_fn(fn, grads, state, params, iters=iters)
+
+    t_leaf = step_of(per_leaf)
+    t_fused = step_of(fused)
+    n_buckets = len({(s.shape[-2], s.shape[-1]) for s in params.values()})
+    return {
+        "size": name, "layers": layers, "d_model": d,
+        "n_matrix_leaves": len(params),
+        "n_buckets": n_buckets,
+        "launches_per_leaf_step": launches_leaf,
+        "launches_fused_step": launches_fused,
+        "per_leaf_step_s": t_leaf,
+        "fused_step_s": t_fused,
+        "fused_speedup": t_leaf / t_fused if t_fused else float("inf"),
+        "timed_backend": "pallas" if on_tpu else "xla",
     }
 
 
@@ -94,6 +170,16 @@ def main(argv=None):
                     help="only up to gpt2-medium (CPU-friendly)")
     ap.add_argument("--ns-steps", type=int, default=5)
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--derive", dest="derive", action="store_true", default=True,
+                    help="derive per-100-step totals from unique shapes (default)")
+    ap.add_argument("--no-derive", dest="derive", action="store_false",
+                    help="time every matrix directly (TPU harness)")
+    ap.add_argument("--fused", action="store_true",
+                    help="also benchmark the shape-bucketed fused engine "
+                         "(wall-clock + launches per optimizer step)")
+    ap.add_argument("--fused-layers", type=int, default=4,
+                    help="layer count for the fused section (0 = the size's "
+                         "real depth; capped by default to bound memory)")
     args = ap.parse_args(argv)
 
     sizes = args.sizes or list(GPT2_SIZES)
@@ -103,13 +189,31 @@ def main(argv=None):
     rows, recs = [], []
     for name in sizes:
         layers, d = GPT2_SIZES[name]
-        r = bench_size(name, layers, d, args.ns_steps, args.iters)
+        r = bench_size(name, layers, d, args.ns_steps, args.iters,
+                       derive=args.derive)
         recs.append(r)
         rows.append([name, f"{r['muon_100steps_s']:.3f}",
                      f"{r['rmnp_100steps_s']:.3f}", f"{r['speedup']:.1f}x",
                      f"{r['flop_ratio']:.0f}x"])
     print("\n== Table 2: preconditioning wall-clock per 100 steps ==")
     print_table(["size", "Muon (s)", "RMNP (s)", "speedup", "FLOP ratio"], rows)
+
+    if args.fused:
+        frows = []
+        for name in sizes:
+            layers, d = GPT2_SIZES[name]
+            fl = args.fused_layers or layers
+            fr = bench_fused(name, min(fl, layers), d, args.iters)
+            recs.append({"bench": "fused_engine", **fr})
+            frows.append([name, fr["n_matrix_leaves"], fr["n_buckets"],
+                          fr["launches_per_leaf_step"], fr["launches_fused_step"],
+                          f"{1e3 * fr['per_leaf_step_s']:.2f}",
+                          f"{1e3 * fr['fused_step_s']:.2f}",
+                          f"{fr['fused_speedup']:.2f}x"])
+        print("\n== fused update engine: launches + wall-clock per step ==")
+        print_table(["size", "leaves", "buckets", "launch/leaf", "launch/fused",
+                     "leaf ms", "fused ms", "speedup"], frows)
+
     write_artifact("precond_time", recs)
     return recs
 

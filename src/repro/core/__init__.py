@@ -1,13 +1,20 @@
 """Core library: the paper's contribution (RMNP) plus the Muon / AdamW
 baselines, mixed update strategy, schedules and preconditioner diagnostics."""
 from repro.core.adamw import adamw  # noqa: F401
+from repro.core.bucketing import (  # noqa: F401
+    BucketPlan,
+    build_plan,
+    fused_rownorm_update,
+)
 from repro.core.dominance import dominance_ratios, global_dominance  # noqa: F401
 from repro.core.mixed import (  # noqa: F401
     ClipStats,
+    FusedMixedState,
     MixedState,
     clip_by_global_norm,
     is_matrix_param,
     mixed_optimizer,
+    momentum_for_diagnostics,
 )
 from repro.core.muon import muon, newton_schulz  # noqa: F401
 from repro.core.rmnp import rmnp, rms_lr_scale, row_normalize  # noqa: F401

@@ -9,11 +9,12 @@ pjit sharding of optimizer state trivially aligned with parameter sharding.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing
 from repro.core.muon import newton_schulz
 from repro.core.rmnp import rms_lr_scale, row_normalize
 from repro.core.types import Optimizer, PyTree, Schedule, map_with_path
@@ -54,6 +55,15 @@ class MixedState(NamedTuple):
     nu: PyTree        # fp32; Adam second moment (zero-size unused for matrix leaves)
 
 
+class FusedMixedState(NamedTuple):
+    """State for the shape-bucketed fused path: matrix momentum lives stacked
+    per bucket; the per-leaf trees keep (1,)*ndim placeholders on matrix
+    leaves so their structure still mirrors ``params`` (simple sharding)."""
+    momentum: PyTree               # AdamW first moment (placeholders on matrix leaves)
+    nu: PyTree                     # AdamW second moment (ditto)
+    buckets: Dict[str, jax.Array]  # stacked matrix momentum, one per shape bucket
+
+
 def mixed_optimizer(
     matrix_kind: str,                      # "rmnp" | "muon" | "adamw"
     lr_matrix: Schedule,
@@ -66,15 +76,35 @@ def mixed_optimizer(
     matrix_embed: bool = True,
     ns_steps: int = 5,
     use_kernel: bool = False,
+    fused: bool = False,
+    momentum_dtype: str = "float32",
 ) -> Optimizer:
     """Build the paper's mixed optimizer.  ``matrix_kind='adamw'`` degrades to
-    plain AdamW on everything (the paper's AdamW baseline)."""
+    plain AdamW on everything (the paper's AdamW baseline).
+
+    ``fused=True`` routes the matrix partition through the shape-bucketed
+    engine (core/bucketing.py): one preconditioner pass per distinct
+    ``(d_in, d_out)`` bucket — via the Pallas kernel when ``use_kernel`` is
+    set, else a single XLA row-normalize per bucket.  Requires
+    ``matrix_kind`` in ('rmnp', 'adamw'); Muon's Newton-Schulz stays
+    per-leaf.  ``momentum_dtype`` ('float32' | 'bfloat16') sets the fused
+    matrix-momentum storage dtype (math is always fp32)."""
     if matrix_kind not in ("rmnp", "muon", "adamw"):
         raise ValueError(f"unknown matrix optimizer {matrix_kind!r}")
+    if fused and matrix_kind == "muon":
+        raise ValueError("fused engine shape-buckets the row-normalize "
+                         "preconditioner; Muon's Newton-Schulz is per-leaf "
+                         "(use fused=False with matrix_kind='muon')")
     b1, b2 = adam_betas
 
     def _is_mat(path, leaf):
         return matrix_kind != "adamw" and is_matrix_param(path, leaf, matrix_embed)
+
+    if fused:
+        return _fused_mixed(
+            lr_matrix, lr_adamw, is_mat=_is_mat, beta=beta,
+            weight_decay=weight_decay, b1=b1, b2=b2, adam_eps=adam_eps,
+            rn_eps=rn_eps, use_kernel=use_kernel, momentum_dtype=momentum_dtype)
 
     def init(params):
         momentum = jax.tree_util.tree_map(
@@ -119,5 +149,92 @@ def mixed_optimizer(
         pick = lambda i: jax.tree_util.tree_map(
             lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
         return pick(0), MixedState(momentum=pick(1), nu=pick(2))
+
+    return Optimizer(init=init, update=update)
+
+
+def momentum_for_diagnostics(opt_state, params, matrix_embed: bool = True) -> PyTree:
+    """Per-leaf momentum tree for dominance logging (paper Eq. 14-16 averages
+    *per parameter*).  The fused state keeps matrix momentum stacked per
+    bucket; averaging bucket-wise would re-weight the statistic, so scatter
+    the buckets back onto the parameter tree first.  Non-fused states pass
+    through unchanged."""
+    if not hasattr(opt_state, "buckets"):
+        return opt_state.momentum
+    plan = bucketing.build_plan(
+        params, predicate=lambda path, leaf: is_matrix_param(path, leaf, matrix_embed))
+    return bucketing.scatter(plan, opt_state.buckets, opt_state.momentum)
+
+
+def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
+                 beta: float, weight_decay: float, b1: float, b2: float,
+                 adam_eps: float, rn_eps: float, use_kernel: bool,
+                 momentum_dtype: str) -> Optimizer:
+    """Mixed optimizer with the matrix partition running through the
+    shape-bucketed fused RMNP engine; AdamW leaves stay per-leaf (they are
+    cheap elementwise updates XLA fuses on its own)."""
+    mdtype = jnp.dtype(momentum_dtype)
+    if mdtype not in (jnp.float32, jnp.bfloat16):
+        raise ValueError(f"momentum_dtype must be float32 or bfloat16, "
+                         f"got {momentum_dtype!r}")
+    plans: Dict[tuple, bucketing.BucketPlan] = {}
+
+    def _plan(params) -> bucketing.BucketPlan:
+        sig = bucketing.plan_signature(params)
+        if sig not in plans:
+            plans[sig] = bucketing.build_plan(params, predicate=is_mat)
+        return plans[sig]
+
+    def init(params):
+        plan = _plan(params)
+        momentum = map_with_path(
+            lambda path, p: jnp.zeros(
+                (1,) * p.ndim if is_mat(path, p) else p.shape, jnp.float32),
+            params)
+        nu = map_with_path(
+            lambda path, p: jnp.zeros(
+                (1,) * p.ndim if is_mat(path, p) else p.shape, jnp.float32),
+            params)
+        return FusedMixedState(momentum=momentum, nu=nu,
+                               buckets=bucketing.init_buckets(plan, mdtype))
+
+    def update(grads, state, params, step):
+        plan = _plan(params)
+        eta_m = lr_matrix(step)
+        eta_a = lr_adamw(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        # AdamW partition: per-leaf (matrix leaves keep their placeholders
+        # and get a throwaway update overwritten by the scatter below)
+        def upd_adam(path, g, mu, nu, p):
+            if is_mat(path, p):
+                return jnp.zeros(p.shape, jnp.float32), mu, nu
+            g32 = g.astype(jnp.float32)
+            mu_new = b1 * mu + (1 - b1) * g32
+            nu_new = b2 * nu + (1 - b2) * jnp.square(g32)
+            d = (mu_new / bc1) / (jnp.sqrt(nu_new / bc2) + adam_eps)
+            return -eta_a * (d + weight_decay * p.astype(jnp.float32)), mu_new, nu_new
+
+        paths_tree = map_with_path(lambda path, _: path, params)
+        out = jax.tree_util.tree_map(upd_adam, paths_tree, grads,
+                                     state.momentum, state.nu, params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        updates, momentum, nu = pick(0), pick(1), pick(2)
+
+        # matrix partition: one fused pass per shape bucket
+        g_b = bucketing.gather(plan, grads, dtype=jnp.float32)
+        p_b = bucketing.gather(plan, params, dtype=jnp.float32)
+        d_b, v_b = bucketing.fused_rownorm_update(
+            plan, g_b, state.buckets, beta=beta, eps=rn_eps,
+            use_kernel=use_kernel)
+        upd_b = {}
+        for bkt in plan.buckets:
+            scale = eta_m * rms_lr_scale((bkt.d_in, bkt.d_out))
+            upd_b[bkt.key] = -scale * (d_b[bkt.key] + weight_decay * p_b[bkt.key])
+        updates = bucketing.scatter(plan, upd_b, updates)
+        return updates, FusedMixedState(momentum=momentum, nu=nu, buckets=v_b)
 
     return Optimizer(init=init, update=update)

@@ -16,11 +16,12 @@ versus Muon's O(mn * min(m, n)) Newton-Schulz matmuls.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing
 from repro.core.types import Optimizer, PyTree, Schedule
 
 
@@ -40,9 +41,25 @@ class RmnpState(NamedTuple):
     momentum: PyTree
 
 
+class RmnpFusedState(NamedTuple):
+    """Matrix momentum stacked per ``(d_in, d_out)`` shape bucket."""
+    buckets: Dict[str, jax.Array]
+
+
 def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
-         eps: float = 1e-8, use_kernel: bool = False) -> Optimizer:
-    """RMNP for matrix parameters. ``use_kernel`` selects the fused Pallas path."""
+         eps: float = 1e-8, use_kernel: bool = False, fused: bool = False,
+         momentum_dtype: str = "float32") -> Optimizer:
+    """RMNP for matrix parameters.
+
+    ``use_kernel`` selects the Pallas path; ``fused=True`` additionally
+    shape-buckets the leaves (core/bucketing.py) so the preconditioner runs
+    once per distinct ``(d_in, d_out)`` shape instead of once per leaf.
+    ``momentum_dtype`` ('float32' | 'bfloat16') sets the fused momentum
+    storage dtype (bf16 halves optimizer-state bytes, fp32 math throughout).
+    """
+    if fused:
+        return _rmnp_fused(lr, beta=beta, weight_decay=weight_decay, eps=eps,
+                           use_kernel=use_kernel, momentum_dtype=momentum_dtype)
 
     def init(params):
         return RmnpState(momentum=jax.tree_util.tree_map(
@@ -68,5 +85,42 @@ def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
         momentum = jax.tree_util.tree_map(lambda x: x[1], out,
                                           is_leaf=lambda x: isinstance(x, tuple))
         return updates, RmnpState(momentum=momentum)
+
+    return Optimizer(init=init, update=update)
+
+
+def _rmnp_fused(lr: Schedule, *, beta: float, weight_decay: float, eps: float,
+                use_kernel: bool, momentum_dtype: str) -> Optimizer:
+    mdtype = jnp.dtype(momentum_dtype)
+    if mdtype not in (jnp.float32, jnp.bfloat16):
+        raise ValueError(f"momentum_dtype must be float32 or bfloat16, "
+                         f"got {momentum_dtype!r}")
+    # leaf->bucket plan: static metadata, computed once at init and reused by
+    # every update trace (keyed on the leaf paths/shapes so one optimizer can
+    # serve several models)
+    plans: Dict[tuple, bucketing.BucketPlan] = {}
+
+    def _plan(params) -> bucketing.BucketPlan:
+        sig = bucketing.plan_signature(params)
+        if sig not in plans:
+            plans[sig] = bucketing.build_plan(params, strict=True)
+        return plans[sig]
+
+    def init(params):
+        return RmnpFusedState(buckets=bucketing.init_buckets(_plan(params), mdtype))
+
+    def update(grads, state, params, step):
+        plan = _plan(params)
+        eta = lr(step)
+        g_b = bucketing.gather(plan, grads, dtype=jnp.float32)
+        p_b = bucketing.gather(plan, params, dtype=jnp.float32)
+        d_b, v_b = bucketing.fused_rownorm_update(
+            plan, g_b, state.buckets, beta=beta, eps=eps, use_kernel=use_kernel)
+        upd_b = {}
+        for b in plan.buckets:
+            scale = eta * rms_lr_scale((b.d_in, b.d_out))
+            upd_b[b.key] = -scale * (d_b[b.key] + weight_decay * p_b[b.key])
+        updates = bucketing.scatter(plan, upd_b, params)
+        return updates, RmnpFusedState(buckets=v_b)
 
     return Optimizer(init=init, update=update)

@@ -34,6 +34,52 @@ def rmnp_momentum_rownorm(g, v, *, beta: float, eps: float = 1e-8):
                                         interpret=_interpret())
 
 
+def rmnp_bucket_update(g, v, *, beta: float, eps: float = 1e-8):
+    """Batched entry point for the shape-bucketed fused engine: one
+    ``pallas_call`` over a whole stacked bucket.
+
+    g: (L, d_in, d_out) fp32 gradients; v: matching momentum in its storage
+    dtype (fp32 or bf16).  Returns (v_new in v.dtype, d fp32).  Momentum
+    buffers are donated where it actually helps — at the train-step jit
+    boundary (``donate_argnums`` on the outer step), where the old bucket's
+    allocation is reused for the new one."""
+    if g.shape[-2] > _MAX_KERNEL_FAN_IN:
+        from repro.kernels.ref import rmnp_momentum_rownorm_ref
+        return rmnp_momentum_rownorm_ref(g, v, beta=beta, eps=eps)
+    return _rm.rmnp_momentum_rownorm_2d(g, v, beta=beta, eps=eps,
+                                        interpret=_interpret())
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations in ``fn``'s jaxpr (recursing into
+    nested call/control-flow jaxprs) — i.e. kernel launches per execution.
+    Traces but never runs ``fn``; used by the fused-engine tests and the
+    launches-per-step benchmark column."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for param in eqn.params.values():
+                n += sum(walk(j) for j in _sub_jaxprs(param))
+        return n
+
+    def _sub_jaxprs(param):
+        # duck-typed: ClosedJaxpr carries .jaxpr, Jaxpr carries .eqns (the
+        # concrete classes moved between jax.core and jax.extend.core)
+        if hasattr(param, "jaxpr"):
+            return _sub_jaxprs(param.jaxpr)
+        if hasattr(param, "eqns"):
+            return [param]
+        if isinstance(param, (list, tuple)):
+            return [j for p in param for j in _sub_jaxprs(p)]
+        return []
+
+    return walk(closed.jaxpr)
+
+
 def ns_step(x, a: float, b: float, c: float):
     """One Newton-Schulz iteration on (..., m, n) fp32 (leading dims mapped
     sequentially — NS already saturates the MXU per matrix)."""

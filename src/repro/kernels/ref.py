@@ -7,11 +7,13 @@ import jax.numpy as jnp
 def rmnp_momentum_rownorm_ref(g, v, *, beta: float, eps: float = 1e-8):
     """Fused RMNP preconditioning: momentum EMA + per-output-neuron l2 norm.
 
-    g, v: (d_in, d_out) fp32.  Returns (v_new, d) with d = v_new / ||col||.
+    g: (..., d_in, d_out) fp32; v may be fp32 or bf16 momentum storage.
+    Math in fp32 (matching the kernel); returns (v_new in v.dtype, d fp32)
+    with d = v_new / ||col||.
     """
-    v_new = beta * v + (1.0 - beta) * g
+    v_new = beta * v.astype(jnp.float32) + (1.0 - beta) * g.astype(jnp.float32)
     norm = jnp.sqrt(jnp.sum(jnp.square(v_new), axis=-2, keepdims=True))
-    return v_new, v_new / (norm + eps)
+    return v_new.astype(v.dtype), v_new / (norm + eps)
 
 
 def matmul_ref(a, b):

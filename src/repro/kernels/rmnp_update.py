@@ -9,6 +9,11 @@ Grid is 1-D over d_out column stripes; each program holds a full
 cross-program accumulation is needed.  This is the TPU-native shape of the
 paper's row-normalization: the reduction runs down the sublane axis while
 the 128-wide lane axis streams output neurons.
+
+The batched (leading-axis) form is the engine behind the shape-bucketed
+fused optimizer path (core/bucketing.py): a whole (L, d_in, d_out) bucket
+of stacked parameter slices is one ``pallas_call``.  Momentum may be stored
+in bf16 (``v`` dtype is preserved on output); math is always fp32.
 """
 from __future__ import annotations
 
@@ -22,23 +27,25 @@ DEFAULT_BLOCK_N = 128
 VMEM_BUDGET = 12 * 2**20  # bytes of fp32 VMEM we allow per operand set
 
 
+def _fits(d_in: int, bn: int) -> bool:
+    """Shared VMEM accounting for pick_block_n.  Each grid program holds
+    FOUR fp32 (d_in, bn) blocks — inputs g, v and outputs v_new, d — so we
+    charge 4 stripes at 4 B/elt.  Both the shrink and grow phases must use
+    this same accounting: the seed shrank against 3 stripes at 4 B/elt but
+    grew against 8 B/elt, i.e. neither loop counted the real residency."""
+    return 4 * d_in * bn * 4 <= VMEM_BUDGET
+
+
 def pick_block_n(d_in: int, n: int) -> int:
-    """Largest lane-aligned block with 3 fp32 stripes within the budget."""
+    """Largest lane-aligned block whose 4 fp32 stripes fit the budget:
+    shrink until the block fits, then grow while the *doubled* block still
+    fits (and divides d_out evenly, so growth never adds padding)."""
     bn = DEFAULT_BLOCK_N
-    while bn > 8 and 3 * d_in * bn * 4 > VMEM_BUDGET:
+    while bn > 8 and not _fits(d_in, bn):
         bn //= 2
-    while bn * 2 <= 512 and 3 * d_in * bn * 8 <= VMEM_BUDGET and n % (bn * 2) == 0:
+    while bn * 2 <= 512 and _fits(d_in, bn * 2) and n % (bn * 2) == 0:
         bn *= 2
     return max(8, bn)
-
-
-def _kernel(g_ref, v_ref, v_out_ref, d_ref, *, beta: float, eps: float):
-    g = g_ref[...].astype(jnp.float32)
-    v = v_ref[...].astype(jnp.float32)
-    v_new = beta * v + (1.0 - beta) * g
-    norm = jnp.sqrt(jnp.sum(v_new * v_new, axis=0, keepdims=True))
-    v_out_ref[...] = v_new
-    d_ref[...] = v_new / (norm + eps)
 
 
 def _kernel3d(g_ref, v_ref, v_out_ref, d_ref, *, beta: float, eps: float):
@@ -46,15 +53,15 @@ def _kernel3d(g_ref, v_ref, v_out_ref, d_ref, *, beta: float, eps: float):
     v = v_ref[0].astype(jnp.float32)
     v_new = beta * v + (1.0 - beta) * g
     norm = jnp.sqrt(jnp.sum(v_new * v_new, axis=0, keepdims=True))
-    v_out_ref[0] = v_new
+    v_out_ref[0] = v_new.astype(v_out_ref.dtype)
     d_ref[0] = v_new / (norm + eps)
 
 
-@functools.partial(jax.jit, static_argnames=("beta", "eps", "block_n", "interpret"))
-def rmnp_momentum_rownorm_2d(g, v, *, beta: float, eps: float = 1e-8,
-                             block_n: int = 0, interpret: bool = False):
-    """g, v: (..., d_in, d_out) fp32 -> (v_new, d).  Leading dims (layer /
-    expert stacks) become the outer grid axis."""
+def _rownorm_2d(g, v, *, beta: float, eps: float = 1e-8,
+                block_n: int = 0, interpret: bool = False):
+    """g: (..., d_in, d_out) fp32; v: same shape, fp32 or bf16 momentum
+    storage -> (v_new in v.dtype, d fp32).  Leading dims (layer / expert
+    stacks, bucket slices) become the outer grid axis."""
     lead = g.shape[:-2]
     d_in, n = g.shape[-2:]
     L = 1
@@ -75,9 +82,18 @@ def rmnp_momentum_rownorm_2d(g, v, *, beta: float, eps: float = 1e-8,
         grid=grid,
         in_specs=[spec, spec],
         out_specs=[spec, spec],
-        out_shape=[jax.ShapeDtypeStruct((L, d_in, n_p), jnp.float32)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((L, d_in, n_p), v.dtype),
+                   jax.ShapeDtypeStruct((L, d_in, n_p), jnp.float32)],
         interpret=interpret,
     )(g2, v2)
     if pad:
         v_new, d = v_new[:, :, :n], d[:, :, :n]
     return v_new.reshape(*lead, d_in, n), d.reshape(*lead, d_in, n)
+
+
+# momentum donation happens at the *train-step* jit boundary
+# (donate_argnums on the outer step fn): a donate annotation on this nested
+# jit would be dropped inside an outer jit, and the eager path pads d_out so
+# the buffers could not alias anyway
+rmnp_momentum_rownorm_2d = functools.partial(
+    jax.jit, static_argnames=("beta", "eps", "block_n", "interpret"))(_rownorm_2d)

@@ -33,10 +33,15 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
           lr_adamw: float = 1e-3, reduced: bool = True, seed: int = 0,
           ckpt_dir: str = "", ckpt_every: int = 0, log_every: int = 10,
           dominance_every: int = 0, matrix_embed: bool = True,
-          use_kernel: bool = False, log_file: str = "",
+          use_kernel: bool = False, fused: bool = False,
+          momentum_dtype: str = "float32", log_file: str = "",
           stop_at: int = 0):
     """``stop_at`` simulates a crash: train to that step (schedules still
-    span ``steps``) and exit WITHOUT the final checkpoint."""
+    span ``steps``) and exit WITHOUT the final checkpoint.
+
+    ``fused`` routes matrix parameters through the shape-bucketed engine
+    (one preconditioner pass per distinct matrix shape instead of one per
+    leaf); ``momentum_dtype='bfloat16'`` halves its momentum storage."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -47,6 +52,8 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
         cosine_with_warmup(lr_adamw, steps),
         matrix_embed=matrix_embed,
         use_kernel=use_kernel,
+        fused=fused,
+        momentum_dtype=momentum_dtype,
     )
     step_fn = make_train_step(cfg, opt, remat="none" if reduced else "full")
     mesh = make_local_mesh(data=len(jax.devices()))
@@ -54,6 +61,13 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
     params = init_params(cfg, jax.random.PRNGKey(seed))
     opt_state = opt.init(params)
     start_step, data_step = 0, 0
+
+    if log_every and (fused or use_kernel):
+        from repro.train.step import optimizer_launches
+        n = optimizer_launches(opt, params)
+        detail = (f" ({len(opt_state.buckets)} shape buckets)"
+                  if hasattr(opt_state, "buckets") else "")
+        print(f"[train] preconditioner kernel launches/step: {n}{detail}")
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     if mgr is not None:
@@ -80,7 +94,9 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
                 m["wall_s"] = round(time.time() - t0, 2)
                 if dominance_every and step % dominance_every == 0 and \
                         optimizer in ("rmnp", "muon"):
-                    dom = global_dominance(opt_state.momentum)
+                    from repro.core.mixed import momentum_for_diagnostics
+                    dom = global_dominance(momentum_for_diagnostics(
+                        opt_state, params, matrix_embed=matrix_embed))
                     m.update({k: float(v) for k, v in dom.items()})
                 history.append(m)
                 print(f"[train] step={step} loss={m['loss']:.4f} "
@@ -116,6 +132,12 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--dominance-every", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--fused", action="store_true",
+                    help="shape-bucketed fused update engine: one "
+                         "preconditioner pass per distinct matrix shape")
+    ap.add_argument("--momentum-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="fused matrix-momentum storage dtype")
     ap.add_argument("--no-matrix-embed", action="store_true",
                     help="AdamW on LM-head/embeddings (paper App D.4 ablation)")
     ap.add_argument("--stop-at", type=int, default=0,
@@ -127,7 +149,8 @@ def main():
           seed=args.seed, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
           log_every=args.log_every, dominance_every=args.dominance_every,
           matrix_embed=not args.no_matrix_embed,
-          use_kernel=args.use_kernel, log_file=args.log_file,
+          use_kernel=args.use_kernel, fused=args.fused,
+          momentum_dtype=args.momentum_dtype, log_file=args.log_file,
           stop_at=args.stop_at)
 
 

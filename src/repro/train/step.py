@@ -20,6 +20,20 @@ from repro.core.types import Optimizer
 from repro.models.model import forward, loss_fn
 
 
+def optimizer_launches(opt: Optimizer, params, step: int = 0) -> int:
+    """Kernel (``pallas_call``) launches one ``opt.update`` costs per step —
+    the quantity the shape-bucketed fused engine minimises: per-leaf kernels
+    launch once per matrix parameter, the fused path once per shape bucket.
+    Pure tracing (abstract values); nothing is compiled or executed."""
+    from repro.kernels.ops import count_pallas_calls
+
+    abstract = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    state = jax.eval_shape(opt.init, params)
+    return count_pallas_calls(
+        opt.update, abstract(params), state, abstract(params), jnp.int32(step))
+
+
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, clip_norm: float = 1.0,
                     remat: str = "full", num_microbatches: int = 1,
                     grad_dtype: Optional[str] = None):

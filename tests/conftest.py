@@ -5,3 +5,5 @@ from pathlib import Path
 # smoke tests / benches must see 1 device (the dry-run sets its own XLA_FLAGS)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+# test helpers (_hypothesis_support) importable regardless of rootdir mode
+sys.path.insert(0, str(Path(__file__).resolve().parent))

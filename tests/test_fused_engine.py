@@ -1,0 +1,262 @@
+"""Shape-bucketed fused update engine (core/bucketing.py).
+
+Invariants under test:
+  * the leaf->bucket plan groups by trailing (d_in, d_out) with leading
+    scan/expert axes flattened, and gather/scatter round-trip exactly;
+  * fused updates match the per-leaf path bit-for-bit in fp32, on both the
+    XLA and the interpret-mode Pallas backends, across ragged shape mixes,
+    padding remainders, and leading axes;
+  * kernel launches per optimizer step equal the number of shape buckets
+    (fused) vs the number of matrix leaves (per-leaf);
+  * pick_block_n's grow/shrink phases use one consistent VMEM accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_support import given, settings, st
+
+from repro.core import apply_updates, constant, mixed_optimizer
+from repro.core.bucketing import build_plan, gather, init_buckets, scatter
+from repro.core.rmnp import rmnp
+from repro.kernels.rmnp_update import VMEM_BUDGET, pick_block_n
+from repro.train.step import optimizer_launches
+
+# ragged mix: two shared buckets (8x16 with a scan stack, 16x8) + a loner,
+# including a d_out that is not a multiple of the kernel block (padding path)
+RAGGED_SHAPES = {
+    "layer_0/w_in": (8, 16),
+    "layer_1/w_in": (8, 16),
+    "stack/w_in": (3, 8, 16),     # scan/expert leading axis
+    "layer_0/w_out": (16, 8),
+    "odd/w": (24, 9),             # 9 % block_n != 0 -> padded stripe
+}
+
+
+def make_tree(shapes, seed=0):
+    return {k: jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), i),
+                                 shape, jnp.float32)
+            for i, (k, shape) in enumerate(sorted(shapes.items()))}
+
+
+class TestBucketPlan:
+    def test_groups_by_trailing_shape(self):
+        plan = build_plan(make_tree(RAGGED_SHAPES))
+        keys = {b.key: b for b in plan.buckets}
+        assert set(keys) == {"8x16", "16x8", "24x9"}
+        assert keys["8x16"].size == 1 + 1 + 3     # scan stack contributes 3 slices
+        assert keys["16x8"].size == 1
+        assert plan.n_leaves == 5
+
+    def test_offsets_partition_the_bucket(self):
+        plan = build_plan(make_tree(RAGGED_SHAPES))
+        for b in plan.buckets:
+            offset = 0
+            for e in b.entries:
+                assert e.offset == offset
+                offset += e.lead
+            assert offset == b.size
+
+    def test_gather_scatter_roundtrip(self):
+        tree = make_tree(RAGGED_SHAPES)
+        plan = build_plan(tree)
+        stacked = gather(plan, tree)
+        back = scatter(plan, stacked, jax.tree_util.tree_map(jnp.zeros_like, tree))
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(tree[k]))
+
+    def test_init_buckets_shapes_and_dtype(self):
+        plan = build_plan(make_tree(RAGGED_SHAPES))
+        bufs = init_buckets(plan, jnp.bfloat16)
+        assert bufs["8x16"].shape == (5, 8, 16)
+        assert all(b.dtype == jnp.bfloat16 for b in bufs.values())
+
+    def test_strict_rejects_vectors(self):
+        with pytest.raises(ValueError, match="matrix leaves"):
+            build_plan({"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}, strict=True)
+
+    def test_shape_change_detected(self):
+        tree = make_tree(RAGGED_SHAPES)
+        plan = build_plan(tree)
+        tree["odd/w"] = jnp.ones((9, 24))
+        with pytest.raises(ValueError, match="changed shape"):
+            gather(plan, tree)
+
+
+def _run_pair(shapes, use_kernel, steps=3, seed=0, **kw):
+    """(per-leaf updates, fused updates) trajectories over a few steps."""
+    params = make_tree(shapes, seed)
+    ref = rmnp(constant(0.1), beta=0.9, use_kernel=use_kernel, **kw)
+    fus = rmnp(constant(0.1), beta=0.9, use_kernel=use_kernel, fused=True, **kw)
+    sr, sf = ref.init(params), fus.init(params)
+    pr, pf = params, params
+    outs = []
+    for step in range(steps):
+        grads = make_tree(shapes, seed=seed + 100 + step)
+        ur, sr = ref.update(grads, sr, pr, step)
+        uf, sf = fus.update(grads, sf, pf, step)
+        pr, pf = apply_updates(pr, ur), apply_updates(pf, uf)
+        outs.append((ur, uf))
+    return outs
+
+
+class TestFusedMatchesPerLeaf:
+    @pytest.mark.parametrize("use_kernel", [False, True],
+                             ids=["xla", "pallas-interpret"])
+    def test_bitwise_fp32_ragged_mix(self, use_kernel):
+        for ur, uf in _run_pair(RAGGED_SHAPES, use_kernel):
+            for k in ur:
+                np.testing.assert_array_equal(
+                    np.asarray(ur[k]), np.asarray(uf[k]),
+                    err_msg=f"{k} (use_kernel={use_kernel})")
+
+    def test_xla_vs_kernel_allclose(self):
+        """Cross-backend agreement stays a loose allclose (reduction order
+        differs); the bitwise claim above is within-backend."""
+        for (ur, _), (uk, _) in zip(_run_pair(RAGGED_SHAPES, False),
+                                    _run_pair(RAGGED_SHAPES, True)):
+            for k in ur:
+                np.testing.assert_allclose(np.asarray(ur[k]), np.asarray(uk[k]),
+                                           atol=1e-5)
+
+    def test_mixed_optimizer_fused_matches(self):
+        shapes = dict(RAGGED_SHAPES, norm=(8,), bias=(16,))
+        params = make_tree(shapes)
+        for use_kernel in (False, True):
+            ref = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                                  use_kernel=use_kernel)
+            fus = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                                  use_kernel=use_kernel, fused=True)
+            sr, sf = ref.init(params), fus.init(params)
+            pr, pf = params, params
+            for step in range(3):
+                grads = make_tree(shapes, seed=7 + step)
+                ur, sr = ref.update(grads, sr, pr, step)
+                uf, sf = fus.update(grads, sf, pf, step)
+                for k in params:
+                    np.testing.assert_array_equal(
+                        np.asarray(ur[k]), np.asarray(uf[k]), err_msg=k)
+                pr, pf = apply_updates(pr, ur), apply_updates(pf, uf)
+
+    def test_bf16_momentum_storage(self):
+        params = make_tree(RAGGED_SHAPES)
+        opt = rmnp(constant(0.1), fused=True, momentum_dtype="bfloat16")
+        state = opt.init(params)
+        assert all(b.dtype == jnp.bfloat16 for b in state.buckets.values())
+        grads = make_tree(RAGGED_SHAPES, seed=5)
+        upd, state = opt.update(grads, state, params, 0)
+        assert all(b.dtype == jnp.bfloat16 for b in state.buckets.values())
+        # math is fp32: vs the fp32-state path the only error is bf16 storage
+        ref = rmnp(constant(0.1), fused=True)
+        sref = ref.init(params)
+        uref, _ = ref.update(grads, sref, params, 0)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(upd[k]), np.asarray(uref[k]),
+                                       atol=1e-5)
+
+    @given(st.lists(st.tuples(st.integers(2, 24), st.integers(2, 24),
+                              st.integers(0, 3)),
+                    min_size=1, max_size=6),
+           st.booleans())
+    @settings(max_examples=15, deadline=None)
+    def test_property_ragged_shape_mixes(self, dims, use_kernel):
+        shapes = {}
+        for i, (d_in, d_out, lead) in enumerate(dims):
+            shapes[f"p{i}/w"] = (lead, d_in, d_out) if lead else (d_in, d_out)
+        for ur, uf in _run_pair(shapes, use_kernel, steps=2,
+                                seed=sum(d_in for d_in, _, _ in dims)):
+            for k in ur:
+                np.testing.assert_array_equal(np.asarray(ur[k]),
+                                              np.asarray(uf[k]), err_msg=k)
+
+
+class TestLaunchCounts:
+    def test_fused_launches_equal_bucket_count(self):
+        params = make_tree(RAGGED_SHAPES)
+        n_buckets = len(build_plan(params).buckets)
+        n_leaves = len(params)
+        fused = rmnp(constant(0.1), use_kernel=True, fused=True)
+        leaf = rmnp(constant(0.1), use_kernel=True)
+        assert optimizer_launches(fused, params) == n_buckets == 3
+        assert optimizer_launches(leaf, params) == n_leaves == 5
+
+    def test_mixed_fused_launches(self):
+        shapes = dict(RAGGED_SHAPES, norm=(8,), bias=(16,))
+        params = make_tree(shapes)
+        fused = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                                use_kernel=True, fused=True)
+        leaf = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                               use_kernel=True)
+        assert optimizer_launches(fused, params) == 3   # buckets, not leaves
+        assert optimizer_launches(leaf, params) == 5    # matrix leaves only
+        assert optimizer_launches(
+            mixed_optimizer("rmnp", constant(0.1), constant(0.05), fused=True),
+            params) == 0                                # XLA fallback: no pallas
+
+    def test_muon_fused_rejected(self):
+        with pytest.raises(ValueError, match="per-leaf"):
+            mixed_optimizer("muon", constant(0.1), constant(0.05), fused=True)
+
+
+class TestPickBlockN:
+    """The grow and shrink phases must share one VMEM accounting that counts
+    the real residency — 4 fp32 blocks (g, v, v_new, d) per program (the
+    seed shrank against 3 stripes at 4 B/elt but grew against 8 B/elt)."""
+
+    def _fits(self, d_in, bn):
+        return 4 * d_in * bn * 4 <= VMEM_BUDGET
+
+    @pytest.mark.parametrize("d_in,n", [(8, 8), (64, 1024), (64, 1600),
+                                        (1024, 4096), (8192, 512),
+                                        (32768, 128), (300, 257)])
+    def test_block_within_budget_and_aligned(self, d_in, n):
+        bn = pick_block_n(d_in, n)
+        assert bn >= 8 and (bn & (bn - 1)) == 0        # power-of-two lanes
+        assert self._fits(d_in, bn) or bn == 8
+
+    def test_grow_fires_when_budget_allows(self):
+        # small fan-in, evenly divisible d_out: the doubled block fits the
+        # budget, so the grow phase must take it all the way to the 512 cap
+        assert pick_block_n(64, 1024) == 512
+
+    def test_grow_respects_divisibility(self):
+        # 1600 = 128 * 12.5: growth to 256 would add padding, so stay at 128
+        assert pick_block_n(64, 1600) == 128
+
+    def test_shrink_respects_budget(self):
+        bn = pick_block_n(32768, 4096)
+        assert self._fits(32768, bn)
+        assert bn < 128
+
+
+class TestDominanceParity:
+    def test_fused_dominance_matches_per_leaf(self):
+        """Dominance logging must average *per parameter* (paper Eq. 14-16)
+        for fused and non-fused states alike — bucket-wise averaging would
+        re-weight shapes with many stacked leaves."""
+        from repro.core import global_dominance
+        from repro.core.mixed import momentum_for_diagnostics
+
+        shapes = dict(RAGGED_SHAPES, norm=(8,), bias=(16,))
+        params = make_tree(shapes)
+        grads = make_tree(shapes, seed=11)
+        ref = mixed_optimizer("rmnp", constant(0.1), constant(0.05))
+        fus = mixed_optimizer("rmnp", constant(0.1), constant(0.05), fused=True)
+        sr, sf = ref.init(params), fus.init(params)
+        _, sr = ref.update(grads, sr, params, 0)
+        _, sf = fus.update(grads, sf, params, 0)
+        dom_r = global_dominance(momentum_for_diagnostics(sr, params))
+        dom_f = global_dominance(momentum_for_diagnostics(sf, params))
+        for k in dom_r:
+            np.testing.assert_allclose(np.asarray(dom_r[k]),
+                                       np.asarray(dom_f[k]), rtol=1e-6)
+
+
+class TestFusedTrainSmoke:
+    def test_end_to_end_fused_train(self):
+        from repro.launch.train import train
+
+        _, opt_state, hist = train("gpt2-60m", "rmnp", steps=4, batch=2,
+                                   seq=16, fused=True, log_every=2)
+        assert hasattr(opt_state, "buckets") and opt_state.buckets
+        assert all(np.isfinite(h["loss"]) for h in hist)

@@ -124,17 +124,7 @@ def bench_fused(name: str, layers: int, d: int, iters: int) -> Dict:
     from repro.core.rmnp import rmnp
     from repro.train.step import optimizer_launches
 
-    key = jax.random.PRNGKey(0)
-    params, grads = {}, {}
-    for i in range(layers):
-        for si, (shape, count) in enumerate(layer_matrix_shapes(d)):
-            for c in range(count):
-                k = f"layer_{i}/m{si}_{c}"
-                params[k] = jnp.zeros(shape, jnp.float32)
-                grads[k] = jax.random.normal(
-                    jax.random.fold_in(key, i * 1009 + si * 31 + c),
-                    shape, jnp.float32)
-
+    params, grads = _bucketed_tree(layers, d, jax.random.PRNGKey(0))
     on_tpu = jax.default_backend() == "tpu"
     per_leaf = rmnp(constant(1e-3), use_kernel=on_tpu)
     fused = rmnp(constant(1e-3), use_kernel=on_tpu, fused=True)
@@ -163,6 +153,70 @@ def bench_fused(name: str, layers: int, d: int, iters: int) -> Dict:
     }
 
 
+def _bucketed_tree(layers: int, d: int, key):
+    """Synthetic (params, grads) trees with the GPT-2 per-layer matrix mix."""
+    params, grads = {}, {}
+    for i in range(layers):
+        for si, (shape, count) in enumerate(layer_matrix_shapes(d)):
+            for c in range(count):
+                k = f"layer_{i}/m{si}_{c}"
+                params[k] = jnp.zeros(shape, jnp.float32)
+                grads[k] = jax.random.normal(
+                    jax.random.fold_in(key, i * 1009 + si * 31 + c),
+                    shape, jnp.float32)
+    return params, grads
+
+
+def bench_fused_apply(name: str, layers: int, d: int, iters: int) -> Dict:
+    """Single-pass fused apply vs the two-pass baseline, timing the FULL
+    update (precondition + weight apply): the two-pass path materializes an
+    fp32 ``d`` bucket per shape then re-reads it in ``apply_updates``; the
+    single-pass path folds the weight update into the kernel and emits the
+    new params directly.
+
+    Wall-clock is measured on the XLA path on CPU / the Pallas path on TPU
+    (interpret-mode Pallas times the Python interpreter, not the math); the
+    memory claim — no full-bucket fp32 intermediate beyond the updated
+    weights — is verified by tracing the Pallas update and counting fp32
+    buffers at the largest bucket shape."""
+    from repro.core import apply_updates
+    from repro.core.rmnp import rmnp
+    from repro.train.step import optimizer_fp32_buffers
+
+    params, grads = _bucketed_tree(layers, d, jax.random.PRNGKey(0))
+    on_tpu = jax.default_backend() == "tpu"
+    two = rmnp(constant(1e-3), use_kernel=on_tpu, fused=True)
+    one = rmnp(constant(1e-3), use_kernel=on_tpu, fused_apply=True)
+
+    def two_pass(g, s, p, step):
+        u, s2 = two.update(g, s, p, step)
+        return apply_updates(p, u), s2
+
+    t_two = time_fn(jax.jit(two_pass), grads, two.init(params), params,
+                    jnp.int32(0), iters=iters)
+    t_one = time_fn(jax.jit(one.update_apply), grads, one.init(params),
+                    params, jnp.int32(0), iters=iters)
+
+    # traced memory claim, exact and free even on CPU: count buffers at the
+    # largest bucket shape, (layers, d, 4d)
+    bucket_shape = (layers, d, 4 * d)
+    buf_two = optimizer_fp32_buffers(
+        rmnp(constant(1e-3), use_kernel=True, fused=True), params, bucket_shape)
+    buf_one = optimizer_fp32_buffers(
+        rmnp(constant(1e-3), use_kernel=True, fused_apply=True), params,
+        bucket_shape)
+    return {
+        "bench": "fused_apply", "size": name, "layers": layers, "d_model": d,
+        "n_matrix_leaves": len(params),
+        "two_pass_step_s": t_two,
+        "single_pass_step_s": t_one,
+        "single_pass_speedup": t_two / t_one if t_one else float("inf"),
+        "fp32_bucket_buffers_two_pass": buf_two,
+        "fp32_bucket_buffers_single_pass": buf_one,
+        "timed_backend": "pallas" if on_tpu else "xla",
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", nargs="*", default=None)
@@ -177,6 +231,10 @@ def main(argv=None):
     ap.add_argument("--fused", action="store_true",
                     help="also benchmark the shape-bucketed fused engine "
                          "(wall-clock + launches per optimizer step)")
+    ap.add_argument("--fused-apply", action="store_true",
+                    help="benchmark the single-pass fused apply (weight "
+                         "update folded into the kernel) vs the two-pass "
+                         "baseline; emits BENCH_fused_step.json")
     ap.add_argument("--fused-layers", type=int, default=4,
                     help="layer count for the fused section (0 = the size's "
                          "real depth; capped by default to bound memory)")
@@ -213,6 +271,24 @@ def main(argv=None):
         print("\n== fused update engine: launches + wall-clock per step ==")
         print_table(["size", "leaves", "buckets", "launch/leaf", "launch/fused",
                      "leaf ms", "fused ms", "speedup"], frows)
+
+    if args.fused_apply:
+        arows, arecs = [], []
+        for name in sizes:
+            layers, d = GPT2_SIZES[name]
+            fl = args.fused_layers or layers
+            ar = bench_fused_apply(name, min(fl, layers), d, args.iters)
+            recs.append(ar)
+            arecs.append(ar)
+            arows.append([name, f"{1e3 * ar['two_pass_step_s']:.2f}",
+                          f"{1e3 * ar['single_pass_step_s']:.2f}",
+                          f"{ar['single_pass_speedup']:.2f}x",
+                          ar["fp32_bucket_buffers_two_pass"],
+                          ar["fp32_bucket_buffers_single_pass"]])
+        print("\n== single-pass fused apply: full update wall-clock ==")
+        print_table(["size", "two-pass ms", "1-pass ms", "speedup",
+                     "fp32 bufs 2p", "fp32 bufs 1p"], arows)
+        write_artifact("BENCH_fused_step", arecs)
 
     write_artifact("precond_time", recs)
     return recs

@@ -117,7 +117,12 @@ def gather(plan: BucketPlan, tree: PyTree, dtype=None) -> Dict[str, jax.Array]:
     for b in plan.buckets:
         parts = []
         for e in b.entries:
-            leaf = by_path[e.path]
+            leaf = by_path.get(e.path)
+            if leaf is None:
+                raise ValueError(
+                    f"bucket plan references leaf {e.path!r} (bucket "
+                    f"{b.key!r}) but the tree has no such path — was the "
+                    f"plan built for a different params tree?")
             if leaf.shape != e.shape:
                 raise ValueError(f"leaf {e.path!r} changed shape: plan has "
                                  f"{e.shape}, tree has {leaf.shape}")
@@ -128,9 +133,14 @@ def gather(plan: BucketPlan, tree: PyTree, dtype=None) -> Dict[str, jax.Array]:
 
 
 def scatter(plan: BucketPlan, stacked: Dict[str, jax.Array],
-            base: PyTree) -> PyTree:
+            base: PyTree, cast: bool = False) -> PyTree:
     """Inverse of :func:`gather`: slice each bucket back into the planned
-    leaves of ``base`` (non-planned leaves pass through untouched)."""
+    leaves of ``base`` (non-planned leaves pass through untouched).
+    ``cast=True`` restores each base leaf's dtype — needed when the bucket
+    was gathered without an explicit dtype and a mixed-dtype bucket promoted
+    on concatenation (the fused-apply path scatters *params*, whose dtypes
+    must stay stable across steps; the two-pass path scatters fp32 updates
+    and must NOT cast)."""
     from repro.core.types import map_with_path
 
     slices = {}
@@ -143,7 +153,8 @@ def scatter(plan: BucketPlan, stacked: Dict[str, jax.Array],
         if hit is None:
             return leaf
         key, e = hit
-        return stacked[key][e.offset:e.offset + e.lead].reshape(e.shape)
+        out = stacked[key][e.offset:e.offset + e.lead].reshape(e.shape)
+        return out.astype(leaf.dtype) if cast else out
 
     return map_with_path(visit, base)
 
@@ -175,3 +186,46 @@ def fused_rownorm_update(plan: BucketPlan,
         d_out[b.key] = d
         v_out[b.key] = v_new
     return d_out, v_out
+
+
+def bucket_update_apply(bucket: Bucket, g: jax.Array, v: jax.Array,
+                        w: jax.Array, *, scale, weight_decay: float,
+                        beta: float, eps: float, use_kernel: bool = False,
+                        shard_axis: Optional[str] = None):
+    """Single-pass fused update of one stacked bucket, ZeRO-1 aware.
+
+    ``g`` / ``w`` are the full ``(L, d_in, d_out)`` gradient / weight
+    operands (both exist per step anyway); ``v`` is the stacked momentum —
+    either the full buffer, or this rank's ``(L/N, ...)`` shard when the
+    optimizer state is ZeRO-sharded along ``L`` over ``shard_axis`` (the
+    per-bucket decision made by :func:`repro.distributed.sharding.\
+bucket_specs`, which falls back to replication on uneven ``L``).  On a
+    shard the kernel runs over the local slices only and the updated weight
+    slices are all-gathered back to the full bucket; momentum stays sharded.
+
+    Returns ``(w_new full, v_new in v's layout)``; no fp32 ``d`` buffer is
+    materialized on either path.
+    """
+    l_loc = v.shape[0]
+    sharded = l_loc != bucket.size
+    if sharded:
+        if shard_axis is None:
+            raise ValueError(
+                f"bucket {bucket.key!r}: momentum holds {l_loc} of "
+                f"{bucket.size} slices but no shard_axis was given")
+        idx = jax.lax.axis_index(shard_axis)
+        g = jax.lax.dynamic_slice_in_dim(g, idx * l_loc, l_loc, axis=0)
+        w_loc = jax.lax.dynamic_slice_in_dim(w, idx * l_loc, l_loc, axis=0)
+    else:
+        w_loc = w
+    if use_kernel:
+        from repro.kernels import ops as kops
+        v_new, w_new = kops.rmnp_bucket_update_apply(
+            g, v, w_loc, scale, weight_decay, beta=beta, eps=eps)
+    else:
+        from repro.kernels.ref import rmnp_rownorm_apply_ref
+        v_new, w_new = rmnp_rownorm_apply_ref(
+            g, v, w_loc, scale, weight_decay, beta=beta, eps=eps)
+    if sharded:
+        w_new = jax.lax.all_gather(w_new, shard_axis, axis=0, tiled=True)
+    return w_new, v_new

@@ -9,7 +9,7 @@ pjit sharding of optimizer state trivially aligned with parameter sharding.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +78,8 @@ def mixed_optimizer(
     use_kernel: bool = False,
     fused: bool = False,
     momentum_dtype: str = "float32",
+    fused_apply: bool = False,
+    shard_axis: Optional[str] = None,
 ) -> Optimizer:
     """Build the paper's mixed optimizer.  ``matrix_kind='adamw'`` degrades to
     plain AdamW on everything (the paper's AdamW baseline).
@@ -88,9 +90,23 @@ def mixed_optimizer(
     set, else a single XLA row-normalize per bucket.  Requires
     ``matrix_kind`` in ('rmnp', 'adamw'); Muon's Newton-Schulz stays
     per-leaf.  ``momentum_dtype`` ('float32' | 'bfloat16') sets the fused
-    matrix-momentum storage dtype (math is always fp32)."""
+    matrix-momentum storage dtype (math is always fp32).
+
+    ``fused_apply=True`` (implies ``fused``) exposes
+    ``Optimizer.update_apply``: matrix buckets fold the weight update into
+    the preconditioner kernel (single memory pass, no fp32 ``d`` bucket) and
+    AdamW leaves compute their new params in place, so the step needs no
+    separate ``apply_updates`` pass.  ``shard_axis`` names the mesh axis the
+    stacked matrix momentum may be ZeRO-1-sharded over (consulted only when
+    a bucket arrives as an ``L/N`` shard inside ``shard_map``); setting it
+    implies ``fused_apply``, since sharded state only works through
+    ``update_apply``."""
     if matrix_kind not in ("rmnp", "muon", "adamw"):
         raise ValueError(f"unknown matrix optimizer {matrix_kind!r}")
+    if shard_axis is not None:
+        fused_apply = True  # sharded state needs the single-pass path
+    if fused_apply:
+        fused = True  # single-pass apply rides the shape-bucketed engine
     if fused and matrix_kind == "muon":
         raise ValueError("fused engine shape-buckets the row-normalize "
                          "preconditioner; Muon's Newton-Schulz is per-leaf "
@@ -104,7 +120,8 @@ def mixed_optimizer(
         return _fused_mixed(
             lr_matrix, lr_adamw, is_mat=_is_mat, beta=beta,
             weight_decay=weight_decay, b1=b1, b2=b2, adam_eps=adam_eps,
-            rn_eps=rn_eps, use_kernel=use_kernel, momentum_dtype=momentum_dtype)
+            rn_eps=rn_eps, use_kernel=use_kernel, momentum_dtype=momentum_dtype,
+            fused_apply=fused_apply, shard_axis=shard_axis)
 
     def init(params):
         momentum = jax.tree_util.tree_map(
@@ -169,7 +186,8 @@ def momentum_for_diagnostics(opt_state, params, matrix_embed: bool = True) -> Py
 def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
                  beta: float, weight_decay: float, b1: float, b2: float,
                  adam_eps: float, rn_eps: float, use_kernel: bool,
-                 momentum_dtype: str) -> Optimizer:
+                 momentum_dtype: str, fused_apply: bool = False,
+                 shard_axis: Optional[str] = None) -> Optimizer:
     """Mixed optimizer with the matrix partition running through the
     shape-bucketed fused RMNP engine; AdamW leaves stay per-leaf (they are
     cheap elementwise updates XLA fuses on its own)."""
@@ -198,31 +216,40 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
         return FusedMixedState(momentum=momentum, nu=nu,
                                buckets=bucketing.init_buckets(plan, mdtype))
 
-    def update(grads, state, params, step):
-        plan = _plan(params)
-        eta_m = lr_matrix(step)
+    def adam_sweep(grads, state, params, step, emit):
+        """Shared per-leaf AdamW pass.  ``emit(u, p)`` turns the fp32
+        update (``u=None`` on matrix leaves, which the bucket scatter
+        overwrites) into the output leaf — the *only* place the two-pass
+        and single-pass paths differ, so their AdamW math cannot drift
+        apart.  Returns (emitted tree, momentum, nu)."""
         eta_a = lr_adamw(step)
         t = jnp.asarray(step, jnp.float32) + 1.0
         bc1 = 1.0 - b1 ** t
         bc2 = 1.0 - b2 ** t
 
-        # AdamW partition: per-leaf (matrix leaves keep their placeholders
-        # and get a throwaway update overwritten by the scatter below)
         def upd_adam(path, g, mu, nu, p):
             if is_mat(path, p):
-                return jnp.zeros(p.shape, jnp.float32), mu, nu
+                return emit(None, p), mu, nu
             g32 = g.astype(jnp.float32)
             mu_new = b1 * mu + (1 - b1) * g32
             nu_new = b2 * nu + (1 - b2) * jnp.square(g32)
             d = (mu_new / bc1) / (jnp.sqrt(nu_new / bc2) + adam_eps)
-            return -eta_a * (d + weight_decay * p.astype(jnp.float32)), mu_new, nu_new
+            u = -eta_a * (d + weight_decay * p.astype(jnp.float32))
+            return emit(u, p), mu_new, nu_new
 
         paths_tree = map_with_path(lambda path, _: path, params)
         out = jax.tree_util.tree_map(upd_adam, paths_tree, grads,
                                      state.momentum, state.nu, params)
         pick = lambda i: jax.tree_util.tree_map(
             lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
-        updates, momentum, nu = pick(0), pick(1), pick(2)
+        return pick(0), pick(1), pick(2)
+
+    def update(grads, state, params, step):
+        plan = _plan(params)
+        eta_m = lr_matrix(step)
+        updates, momentum, nu = adam_sweep(
+            grads, state, params, step,
+            emit=lambda u, p: jnp.zeros(p.shape, jnp.float32) if u is None else u)
 
         # matrix partition: one fused pass per shape bucket
         g_b = bucketing.gather(plan, grads, dtype=jnp.float32)
@@ -237,4 +264,32 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
         updates = bucketing.scatter(plan, upd_b, updates)
         return updates, FusedMixedState(momentum=momentum, nu=nu, buckets=v_b)
 
-    return Optimizer(init=init, update=update)
+    def update_apply(grads, state, params, step):
+        """Single-pass fused apply: -> (new_params, state).  AdamW leaves
+        compute their new params in place (same op order as apply_updates,
+        so fp32 results are bit-identical to the two-pass path); matrix
+        buckets run the fused-apply kernel — gather (g, v, w), one pass,
+        scatter the updated weights — with no fp32 ``d`` bucket and no
+        updates tree."""
+        plan = _plan(params)
+        eta_m = lr_matrix(step)
+        new_params, momentum, nu = adam_sweep(
+            grads, state, params, step,
+            emit=lambda u, p: p if u is None else p + u.astype(p.dtype))
+
+        # matrix partition: one single-pass fused-apply kernel per bucket
+        g_b = bucketing.gather(plan, grads, dtype=jnp.float32)
+        p_b = bucketing.gather(plan, params)
+        w_b, v_b = {}, {}
+        for bkt in plan.buckets:
+            scale = eta_m * rms_lr_scale((bkt.d_in, bkt.d_out))
+            w_b[bkt.key], v_b[bkt.key] = bucketing.bucket_update_apply(
+                bkt, g_b[bkt.key], state.buckets[bkt.key], p_b[bkt.key],
+                scale=scale, weight_decay=weight_decay, beta=beta, eps=rn_eps,
+                use_kernel=use_kernel, shard_axis=shard_axis)
+        new_params = bucketing.scatter(plan, w_b, new_params, cast=True)
+        return new_params, FusedMixedState(momentum=momentum, nu=nu,
+                                           buckets=v_b)
+
+    return Optimizer(init=init, update=update,
+                     update_apply=update_apply if fused_apply else None)

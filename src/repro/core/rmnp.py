@@ -16,7 +16,7 @@ versus Muon's O(mn * min(m, n)) Newton-Schulz matmuls.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +48,8 @@ class RmnpFusedState(NamedTuple):
 
 def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
          eps: float = 1e-8, use_kernel: bool = False, fused: bool = False,
-         momentum_dtype: str = "float32") -> Optimizer:
+         momentum_dtype: str = "float32", fused_apply: bool = False,
+         shard_axis: Optional[str] = None) -> Optimizer:
     """RMNP for matrix parameters.
 
     ``use_kernel`` selects the Pallas path; ``fused=True`` additionally
@@ -56,10 +57,25 @@ def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
     once per distinct ``(d_in, d_out)`` shape instead of once per leaf.
     ``momentum_dtype`` ('float32' | 'bfloat16') sets the fused momentum
     storage dtype (bf16 halves optimizer-state bytes, fp32 math throughout).
+
+    ``fused_apply=True`` (implies ``fused``) additionally exposes
+    ``Optimizer.update_apply``: the weight update is folded into the
+    per-bucket kernel, so the step is a single memory pass over (g, v, w)
+    with no fp32 ``d`` bucket and no separate ``apply_updates`` pass.
+    ``shard_axis`` names the mesh axis the stacked momentum may be
+    ZeRO-1-sharded over (only consulted inside ``shard_map`` when a bucket
+    arrives as an ``L/N`` shard; full buckets take the replicated path).
+    Setting it implies ``fused_apply`` — sharded state only works through
+    ``update_apply``, so silently ignoring it would replicate the state.
     """
+    if shard_axis is not None:
+        fused_apply = True  # sharded state needs the single-pass path
+    if fused_apply:
+        fused = True  # single-pass apply rides the shape-bucketed engine
     if fused:
         return _rmnp_fused(lr, beta=beta, weight_decay=weight_decay, eps=eps,
-                           use_kernel=use_kernel, momentum_dtype=momentum_dtype)
+                           use_kernel=use_kernel, momentum_dtype=momentum_dtype,
+                           fused_apply=fused_apply, shard_axis=shard_axis)
 
     def init(params):
         return RmnpState(momentum=jax.tree_util.tree_map(
@@ -90,7 +106,9 @@ def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
 
 
 def _rmnp_fused(lr: Schedule, *, beta: float, weight_decay: float, eps: float,
-                use_kernel: bool, momentum_dtype: str) -> Optimizer:
+                use_kernel: bool, momentum_dtype: str,
+                fused_apply: bool = False,
+                shard_axis: Optional[str] = None) -> Optimizer:
     mdtype = jnp.dtype(momentum_dtype)
     if mdtype not in (jnp.float32, jnp.bfloat16):
         raise ValueError(f"momentum_dtype must be float32 or bfloat16, "
@@ -123,4 +141,24 @@ def _rmnp_fused(lr: Schedule, *, beta: float, weight_decay: float, eps: float,
         updates = bucketing.scatter(plan, upd_b, params)
         return updates, RmnpFusedState(buckets=v_b)
 
-    return Optimizer(init=init, update=update)
+    def update_apply(grads, state, params, step):
+        """Single-pass fused apply: (grads, state, params, step) ->
+        (new_params, state).  Params are gathered per bucket in their native
+        dtype, updated in one kernel pass, and scattered back — the fp32
+        ``d`` bucket and the updates tree never exist."""
+        plan = _plan(params)
+        eta = lr(step)
+        g_b = bucketing.gather(plan, grads, dtype=jnp.float32)
+        p_b = bucketing.gather(plan, params)
+        w_b, v_b = {}, {}
+        for b in plan.buckets:
+            scale = eta * rms_lr_scale((b.d_in, b.d_out))
+            w_b[b.key], v_b[b.key] = bucketing.bucket_update_apply(
+                b, g_b[b.key], state.buckets[b.key], p_b[b.key],
+                scale=scale, weight_decay=weight_decay, beta=beta, eps=eps,
+                use_kernel=use_kernel, shard_axis=shard_axis)
+        new_params = bucketing.scatter(plan, w_b, params, cast=True)
+        return new_params, RmnpFusedState(buckets=v_b)
+
+    return Optimizer(init=init, update=update,
+                     update_apply=update_apply if fused_apply else None)

@@ -12,7 +12,7 @@ new parameters are ``params + updates``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 
@@ -24,6 +24,11 @@ Schedule = Callable[[jax.Array], jax.Array]  # step -> lr
 class Optimizer:
     init: Callable[[PyTree], PyTree]
     update: Callable[..., Any]  # (grads, state, params, step) -> (updates, state)
+    # single-pass fused apply: (grads, state, params, step) -> (new_params,
+    # state) — the weight update is folded into the preconditioner kernel, so
+    # no updates tree (and no apply_updates pass) ever exists.  Train steps
+    # use it when present; None means two-pass update + apply_updates.
+    update_apply: Optional[Callable[..., Any]] = None
 
 
 class MixedState(NamedTuple):

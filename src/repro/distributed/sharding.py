@@ -36,6 +36,10 @@ DEFAULT_RULES = {
     "layers": None,
     "lora": None,
     "state": None,
+    # leading L axis of a stacked (L, d_in, d_out) optimizer-state bucket
+    # (core/bucketing.py): ZeRO-1 shard over the data axis.  Uneven L falls
+    # back to replication automatically (_resolve_axis divisibility check).
+    "bucket": "data",
 }
 
 _ctx = threading.local()
@@ -112,3 +116,27 @@ def logical(x: jax.Array, names: Sequence[LogicalAxis]) -> jax.Array:
 def named_sharding(shape: Sequence[int], names: Sequence[LogicalAxis],
                    mesh: Mesh, rules: Optional[dict] = None) -> NamedSharding:
     return NamedSharding(mesh, spec_for(shape, names, mesh, rules))
+
+
+def bucket_specs(opt_state, mesh: Mesh, rules: Optional[dict] = None):
+    """Per-leaf PartitionSpec tree for an optimizer state whose matrix
+    momentum lives in stacked ``(L, d_in, d_out)`` bucket buffers
+    (core/bucketing.py): bucket leaves shard their leading ``L`` axis via
+    the ``"bucket"`` logical rule (ZeRO-1 optimizer-state partitioning —
+    per-rank stacked-momentum bytes drop by the axis size), falling back to
+    replication per bucket when ``L`` is not divisible by the mesh axis;
+    everything else is replicated.  Feed the result to ``shard_map``
+    in/out_specs (train/dp_step.py) or ``jax.device_put``."""
+    from repro.core.types import map_with_path
+
+    def visit(path, leaf):
+        # only the state's top-level `buckets` field holds stacked momentum;
+        # a *parameter* path containing 'buckets' (under momentum/nu) must
+        # not match.  NamedTuple fields render as '.buckets' or 'buckets'
+        # depending on the jax key type, so strip the leading dot.
+        head = path.split("/", 1)[0].lstrip(".")
+        if head == "buckets" and getattr(leaf, "ndim", 0) == 3:
+            return spec_for(leaf.shape, ("bucket", None, None), mesh, rules)
+        return P()
+
+    return map_with_path(visit, opt_state)

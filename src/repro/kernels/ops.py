@@ -50,34 +50,73 @@ def rmnp_bucket_update(g, v, *, beta: float, eps: float = 1e-8):
                                         interpret=_interpret())
 
 
+def rmnp_bucket_update_apply(g, v, w, scale, wd, *, beta: float,
+                             eps: float = 1e-8):
+    """Single-pass fused apply over a stacked bucket: momentum EMA + row
+    normalize + weight update in one ``pallas_call`` — the fp32 ``d`` buffer
+    of the two-pass path is never materialized.
+
+    g: (L, d_in, d_out) fp32 gradients; v: matching momentum in its storage
+    dtype; w: matching weights (math fp32, output in w.dtype); scale/wd are
+    traced fp32 scalars (scale folds lr * rms_lr_scale).  Returns
+    (v_new, w_new)."""
+    if g.shape[-2] > _MAX_KERNEL_FAN_IN:
+        from repro.kernels.ref import rmnp_rownorm_apply_ref
+        return rmnp_rownorm_apply_ref(g, v, w, scale, wd, beta=beta, eps=eps)
+    scalars = jnp.stack([jnp.asarray(scale, jnp.float32),
+                         jnp.asarray(wd, jnp.float32)])
+    return _rm.rmnp_rownorm_apply_2d(g, v, w, scalars, beta=beta, eps=eps,
+                                     interpret=_interpret())
+
+
+def _sub_jaxprs(param):
+    # duck-typed: ClosedJaxpr carries .jaxpr, Jaxpr carries .eqns (the
+    # concrete classes moved between jax.core and jax.extend.core)
+    if hasattr(param, "jaxpr"):
+        return _sub_jaxprs(param.jaxpr)
+    if hasattr(param, "eqns"):
+        return [param]
+    if isinstance(param, (list, tuple)):
+        return [j for p in param for j in _sub_jaxprs(p)]
+    return []
+
+
+def _walk_eqns(jaxpr, visit) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += visit(eqn)
+        for param in eqn.params.values():
+            n += sum(_walk_eqns(j, visit) for j in _sub_jaxprs(param))
+    return n
+
+
 def count_pallas_calls(fn, *args, **kwargs) -> int:
     """Number of ``pallas_call`` equations in ``fn``'s jaxpr (recursing into
     nested call/control-flow jaxprs) — i.e. kernel launches per execution.
     Traces but never runs ``fn``; used by the fused-engine tests and the
     launches-per-step benchmark column."""
     closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _walk_eqns(closed.jaxpr,
+                      lambda eqn: int(eqn.primitive.name == "pallas_call"))
 
-    def walk(jaxpr) -> int:
-        n = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-            for param in eqn.params.values():
-                n += sum(walk(j) for j in _sub_jaxprs(param))
-        return n
 
-    def _sub_jaxprs(param):
-        # duck-typed: ClosedJaxpr carries .jaxpr, Jaxpr carries .eqns (the
-        # concrete classes moved between jax.core and jax.extend.core)
-        if hasattr(param, "jaxpr"):
-            return _sub_jaxprs(param.jaxpr)
-        if hasattr(param, "eqns"):
-            return [param]
-        if isinstance(param, (list, tuple)):
-            return [j for p in param for j in _sub_jaxprs(p)]
-        return []
+def count_buffer_eqns(fn, shape, dtype, *args, **kwargs) -> int:
+    """Number of jaxpr equations in ``fn`` (recursive) producing an output of
+    exactly ``(shape, dtype)`` — the tracer behind the single-pass engine's
+    'no full-partition fp32 intermediate' claim: per bucket, the two-pass
+    update materializes the fp32 preconditioned ``d`` buffer *and* the scaled
+    update at the full bucket shape, while fused-apply emits only the updated
+    weights.  Traces but never runs ``fn``."""
+    shape = tuple(shape)
+    dtype = jnp.dtype(dtype)
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
 
-    return walk(closed.jaxpr)
+    def visit(eqn):
+        return sum(1 for v in eqn.outvars
+                   if getattr(v.aval, "shape", None) == shape
+                   and getattr(v.aval, "dtype", None) == dtype)
+
+    return _walk_eqns(closed.jaxpr, visit)
 
 
 def ns_step(x, a: float, b: float, c: float):

@@ -16,6 +16,24 @@ def rmnp_momentum_rownorm_ref(g, v, *, beta: float, eps: float = 1e-8):
     return v_new.astype(v.dtype), v_new / (norm + eps)
 
 
+def rmnp_rownorm_apply_ref(g, v, w, scale, wd, *, beta: float,
+                           eps: float = 1e-8):
+    """Single-pass fused apply: momentum EMA + row normalize + weight update.
+
+    g: (..., d_in, d_out) fp32; v: fp32 or bf16 momentum storage; w: weights
+    (math in fp32, returned in w.dtype); scale already folds lr *
+    rms_lr_scale.  Op order matches the Pallas kernel and the two-pass
+    reference exactly (update = -scale*(d + wd*w), then w + update), so fp32
+    results are bit-identical to both.
+    """
+    w32 = w.astype(jnp.float32)
+    v_new = beta * v.astype(jnp.float32) + (1.0 - beta) * g.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(jnp.square(v_new), axis=-2, keepdims=True))
+    d = v_new / (norm + eps)
+    w_new = w32 + (-scale) * (d + wd * w32)
+    return v_new.astype(v.dtype), w_new.astype(w.dtype)
+
+
 def matmul_ref(a, b):
     return jnp.dot(a, b, preferred_element_type=jnp.float32)
 

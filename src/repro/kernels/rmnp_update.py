@@ -14,6 +14,15 @@ The batched (leading-axis) form is the engine behind the shape-bucketed
 fused optimizer path (core/bucketing.py): a whole (L, d_in, d_out) bucket
 of stacked parameter slices is one ``pallas_call``.  Momentum may be stored
 in bf16 (``v`` dtype is preserved on output); math is always fp32.
+
+The *fused-apply* variant additionally takes the stacked weights plus
+scalar (lr-scale, weight-decay) and emits the updated weights directly:
+
+    w_new = w - scale * (v_new / (||v_new||_col + eps) + wd * w)
+
+so the fp32 ``d`` bucket is never materialized in HBM and the separate
+``apply_updates`` tree pass disappears — the optimizer becomes a single
+memory pass over (g, v, w).
 """
 from __future__ import annotations
 
@@ -22,28 +31,31 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_N = 128
 VMEM_BUDGET = 12 * 2**20  # bytes of fp32 VMEM we allow per operand set
 
 
-def _fits(d_in: int, bn: int) -> bool:
-    """Shared VMEM accounting for pick_block_n.  Each grid program holds
-    FOUR fp32 (d_in, bn) blocks — inputs g, v and outputs v_new, d — so we
-    charge 4 stripes at 4 B/elt.  Both the shrink and grow phases must use
-    this same accounting: the seed shrank against 3 stripes at 4 B/elt but
-    grew against 8 B/elt, i.e. neither loop counted the real residency."""
-    return 4 * d_in * bn * 4 <= VMEM_BUDGET
+def _fits(d_in: int, bn: int, stripes: int = 4) -> bool:
+    """Shared VMEM accounting for pick_block_n.  ``stripes`` counts the fp32
+    (d_in, bn) blocks each grid program holds: 4 for the precondition-only
+    kernel (inputs g, v and outputs v_new, d) and 6 for fused-apply (g, v, w
+    in; v_new, w_new out; plus the in-register d stripe).  The shrink and
+    grow phases must use this same accounting: the seed shrank against 3
+    stripes at 4 B/elt but grew against 8 B/elt, i.e. neither loop counted
+    the real residency."""
+    return stripes * d_in * bn * 4 <= VMEM_BUDGET
 
 
-def pick_block_n(d_in: int, n: int) -> int:
-    """Largest lane-aligned block whose 4 fp32 stripes fit the budget:
-    shrink until the block fits, then grow while the *doubled* block still
-    fits (and divides d_out evenly, so growth never adds padding)."""
+def pick_block_n(d_in: int, n: int, stripes: int = 4) -> int:
+    """Largest lane-aligned block whose ``stripes`` fp32 stripes fit the
+    budget: shrink until the block fits, then grow while the *doubled* block
+    still fits (and divides d_out evenly, so growth never adds padding)."""
     bn = DEFAULT_BLOCK_N
-    while bn > 8 and not _fits(d_in, bn):
+    while bn > 8 and not _fits(d_in, bn, stripes):
         bn //= 2
-    while bn * 2 <= 512 and _fits(d_in, bn * 2) and n % (bn * 2) == 0:
+    while bn * 2 <= 512 and _fits(d_in, bn * 2, stripes) and n % (bn * 2) == 0:
         bn *= 2
     return max(8, bn)
 
@@ -57,38 +69,53 @@ def _kernel3d(g_ref, v_ref, v_out_ref, d_ref, *, beta: float, eps: float):
     d_ref[0] = v_new / (norm + eps)
 
 
-def _rownorm_2d(g, v, *, beta: float, eps: float = 1e-8,
-                block_n: int = 0, interpret: bool = False):
-    """g: (..., d_in, d_out) fp32; v: same shape, fp32 or bf16 momentum
-    storage -> (v_new in v.dtype, d fp32).  Leading dims (layer / expert
-    stacks, bucket slices) become the outer grid axis."""
-    lead = g.shape[:-2]
-    d_in, n = g.shape[-2:]
+def _stripe_call(kernel, operands, out_dtypes, *, block_n: int, stripes: int,
+                 interpret: bool, scalars=None):
+    """Shared scaffolding for the column-stripe kernels: flatten leading
+    dims (layer / expert stacks, bucket slices) into the outer grid axis,
+    zero-pad d_out to the block, run one program per (l, stripe), slice the
+    pad back off.  ``scalars`` (optional (k,) fp32) is prepended as a
+    whole-array SMEM operand.  Padded columns are self-contained (their
+    norm is local garbage) and never escape the slice."""
+    lead = operands[0].shape[:-2]
+    d_in, n = operands[0].shape[-2:]
     L = 1
     for s in lead:
         L *= s
-    g2 = g.reshape(L, d_in, n)
-    v2 = v.reshape(L, d_in, n)
-    bn = block_n or pick_block_n(d_in, n)
+    ops3 = [o.reshape(L, d_in, n) for o in operands]
+    bn = block_n or pick_block_n(d_in, n, stripes=stripes)
     pad = (-n) % bn
     if pad:
-        g2 = jnp.pad(g2, ((0, 0), (0, 0), (0, pad)))
-        v2 = jnp.pad(v2, ((0, 0), (0, 0), (0, pad)))
+        ops3 = [jnp.pad(o, ((0, 0), (0, 0), (0, pad))) for o in ops3]
     n_p = n + pad
     grid = (L, n_p // bn)
     spec = pl.BlockSpec((1, d_in, bn), lambda l, j: (l, 0, j))
-    v_new, d = pl.pallas_call(
-        functools.partial(_kernel3d, beta=beta, eps=eps),
+    in_specs = [spec] * len(ops3)
+    if scalars is not None:
+        in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)] + in_specs
+        ops3 = [scalars.astype(jnp.float32)] + ops3
+    outs = pl.pallas_call(
+        kernel,
         grid=grid,
-        in_specs=[spec, spec],
-        out_specs=[spec, spec],
-        out_shape=[jax.ShapeDtypeStruct((L, d_in, n_p), v.dtype),
-                   jax.ShapeDtypeStruct((L, d_in, n_p), jnp.float32)],
+        in_specs=in_specs,
+        out_specs=[spec] * len(out_dtypes),
+        out_shape=[jax.ShapeDtypeStruct((L, d_in, n_p), dt)
+                   for dt in out_dtypes],
         interpret=interpret,
-    )(g2, v2)
+    )(*ops3)
     if pad:
-        v_new, d = v_new[:, :, :n], d[:, :, :n]
-    return v_new.reshape(*lead, d_in, n), d.reshape(*lead, d_in, n)
+        outs = [o[:, :, :n] for o in outs]
+    return tuple(o.reshape(*lead, d_in, n) for o in outs)
+
+
+def _rownorm_2d(g, v, *, beta: float, eps: float = 1e-8,
+                block_n: int = 0, interpret: bool = False):
+    """g: (..., d_in, d_out) fp32; v: same shape, fp32 or bf16 momentum
+    storage -> (v_new in v.dtype, d fp32)."""
+    return _stripe_call(
+        functools.partial(_kernel3d, beta=beta, eps=eps),
+        [g, v], [v.dtype, jnp.float32],
+        block_n=block_n, stripes=4, interpret=interpret)
 
 
 # momentum donation happens at the *train-step* jit boundary
@@ -97,3 +124,36 @@ def _rownorm_2d(g, v, *, beta: float, eps: float = 1e-8,
 # the buffers could not alias anyway
 rmnp_momentum_rownorm_2d = functools.partial(
     jax.jit, static_argnames=("beta", "eps", "block_n", "interpret"))(_rownorm_2d)
+
+
+def _kernel3d_apply(scal_ref, g_ref, v_ref, w_ref, v_out_ref, w_out_ref,
+                    *, beta: float, eps: float):
+    scale = scal_ref[0]
+    wd = scal_ref[1]
+    g = g_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    v_new = beta * v + (1.0 - beta) * g
+    norm = jnp.sqrt(jnp.sum(v_new * v_new, axis=0, keepdims=True))
+    d = v_new / (norm + eps)
+    v_out_ref[0] = v_new.astype(v_out_ref.dtype)
+    # same op order as the two-pass reference (update = -scale*(d + wd*w),
+    # then w + update) so fp32 results are bit-identical to it
+    w_out_ref[0] = (w + (-scale) * (d + wd * w)).astype(w_out_ref.dtype)
+
+
+def _rownorm_apply_2d(g, v, w, scalars, *, beta: float, eps: float = 1e-8,
+                      block_n: int = 0, interpret: bool = False):
+    """Single-pass fused apply.  g: (..., d_in, d_out) fp32; v: momentum in
+    its storage dtype (fp32 or bf16); w: weights (any float dtype, math in
+    fp32, output in w.dtype); scalars: (2,) fp32 ``[scale, weight_decay]``
+    where scale already folds lr * rms_lr_scale.  Returns (v_new, w_new) —
+    no fp32 ``d`` buffer is ever written."""
+    return _stripe_call(
+        functools.partial(_kernel3d_apply, beta=beta, eps=eps),
+        [g, v, w], [v.dtype, w.dtype],
+        block_n=block_n, stripes=6, interpret=interpret, scalars=scalars)
+
+
+rmnp_rownorm_apply_2d = functools.partial(
+    jax.jit, static_argnames=("beta", "eps", "block_n", "interpret"))(_rownorm_apply_2d)

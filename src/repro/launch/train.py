@@ -34,14 +34,16 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
           ckpt_dir: str = "", ckpt_every: int = 0, log_every: int = 10,
           dominance_every: int = 0, matrix_embed: bool = True,
           use_kernel: bool = False, fused: bool = False,
-          momentum_dtype: str = "float32", log_file: str = "",
-          stop_at: int = 0):
+          momentum_dtype: str = "float32", fused_apply: bool = False,
+          log_file: str = "", stop_at: int = 0):
     """``stop_at`` simulates a crash: train to that step (schedules still
     span ``steps``) and exit WITHOUT the final checkpoint.
 
     ``fused`` routes matrix parameters through the shape-bucketed engine
     (one preconditioner pass per distinct matrix shape instead of one per
-    leaf); ``momentum_dtype='bfloat16'`` halves its momentum storage."""
+    leaf); ``momentum_dtype='bfloat16'`` halves its momentum storage;
+    ``fused_apply`` folds the weight update into the per-bucket kernel
+    (single memory pass, no separate apply_updates sweep)."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -54,6 +56,7 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
         use_kernel=use_kernel,
         fused=fused,
         momentum_dtype=momentum_dtype,
+        fused_apply=fused_apply,
     )
     step_fn = make_train_step(cfg, opt, remat="none" if reduced else "full")
     mesh = make_local_mesh(data=len(jax.devices()))
@@ -62,7 +65,7 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
     opt_state = opt.init(params)
     start_step, data_step = 0, 0
 
-    if log_every and (fused or use_kernel):
+    if log_every and (fused or fused_apply or use_kernel):
         from repro.train.step import optimizer_launches
         n = optimizer_launches(opt, params)
         detail = (f" ({len(opt_state.buckets)} shape buckets)"
@@ -138,6 +141,10 @@ def main():
     ap.add_argument("--momentum-dtype", default="float32",
                     choices=["float32", "bfloat16"],
                     help="fused matrix-momentum storage dtype")
+    ap.add_argument("--fused-apply", action="store_true",
+                    help="single-pass update: fold the weight apply into "
+                         "the per-bucket RMNP kernel (implies --fused; no "
+                         "fp32 d buffer, no separate apply_updates pass)")
     ap.add_argument("--no-matrix-embed", action="store_true",
                     help="AdamW on LM-head/embeddings (paper App D.4 ablation)")
     ap.add_argument("--stop-at", type=int, default=0,
@@ -150,8 +157,8 @@ def main():
           log_every=args.log_every, dominance_every=args.dominance_every,
           matrix_embed=not args.no_matrix_embed,
           use_kernel=args.use_kernel, fused=args.fused,
-          momentum_dtype=args.momentum_dtype, log_file=args.log_file,
-          stop_at=args.stop_at)
+          momentum_dtype=args.momentum_dtype, fused_apply=args.fused_apply,
+          log_file=args.log_file, stop_at=args.stop_at)
 
 
 if __name__ == "__main__":

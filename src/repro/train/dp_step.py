@@ -1,15 +1,25 @@
-"""Explicit data-parallel train step with compressed gradient reduction.
+"""Explicit data-parallel train step with compressed gradient reduction
+and optional ZeRO-1 optimizer-state sharding.
 
 The pjit train step (train/step.py) lets XLA choose the gradient
 reduction; this variant takes control of the cross-replica collective via
 ``shard_map`` over the data axis so the int8 error-feedback schedule
 (distributed/compression.py) replaces the fp32 ring all-reduce.  Params
-and optimizer state are replicated across the axis (pure DP / ZeRO-0);
-use the pjit path when parameters must be sharded.
+are replicated across the axis.
+
+Optimizer state has two modes:
+
+* ``shard_state=False`` (ZeRO-0): state replicated, any optimizer works.
+* ``shard_state=True`` (ZeRO-1): the stacked per-bucket matrix momentum
+  (core/bucketing.py) is sharded along its leading ``L`` axis — each rank
+  holds ``L/N`` slices, runs the single-pass fused-apply kernel on its
+  shard, and all-gathers only the updated param slices.  Per-rank stacked
+  momentum bytes drop by the data-axis size.  Requires a fused-apply
+  optimizer built with ``shard_axis=axis_name``; buckets whose ``L`` is
+  not divisible by the axis fall back to replication individually
+  (distributed/sharding.py ``bucket_specs``).
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -18,20 +28,40 @@ from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.core import apply_updates, clip_by_global_norm
-from repro.core.types import Optimizer
+from repro.core.types import Optimizer, PyTree
 from repro.distributed.compression import (
     CompressionState, compressed_mean, exact_mean, init_compression_state,
 )
+from repro.distributed.sharding import bucket_specs
 from repro.models.model import loss_fn
 
 
 def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                        *, axis_name: str = "data", clip_norm: float = 1.0,
-                       compress: bool = True, remat: str = "none"):
+                       compress: bool = True, remat: str = "none",
+                       shard_state: bool = False,
+                       opt_state: PyTree = None):
     """(params, opt_state, comp_state, batch, step) -> (params, opt_state,
-    comp_state, metrics).  Batch is sharded along ``axis_name``; everything
-    else replicated."""
+    comp_state, metrics).  Batch is sharded along ``axis_name``; params
+    replicated; optimizer state replicated (default) or ZeRO-1-sharded
+    along the stacked-bucket ``L`` axis (``shard_state=True``, which needs
+    ``opt_state`` — real or ``jax.eval_shape`` abstract — to derive the
+    per-bucket specs, and an optimizer built with ``fused_apply=True,
+    shard_axis=axis_name``)."""
     n_dev = mesh.shape[axis_name]
+    state_spec = P()
+    if shard_state:
+        if opt.update_apply is None:
+            raise ValueError(
+                "shard_state=True requires a fused-apply optimizer "
+                "(fused_apply=True, shard_axis=axis_name): the sharded step "
+                "runs the update kernel on local momentum slices and "
+                "all-gathers the updated param slices")
+        if opt_state is None:
+            raise ValueError(
+                "shard_state=True needs opt_state (the real state or its "
+                "jax.eval_shape) to derive per-bucket partition specs")
+        state_spec = bucket_specs(opt_state, mesh, {"bucket": axis_name})
 
     def local_step(params, opt_state, comp_state, batch, step):
         (loss, metrics), grads = jax.value_and_grad(
@@ -44,8 +74,11 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
         metrics = jax.tree_util.tree_map(
             lambda m: jax.lax.pmean(m, axis_name), metrics)
         grads, clip_stats = clip_by_global_norm(grads, clip_norm)
-        updates, opt_state = opt.update(grads, opt_state, params, step)
-        params = apply_updates(params, updates)
+        if opt.update_apply is not None:
+            params, opt_state = opt.update_apply(grads, opt_state, params, step)
+        else:
+            updates, opt_state = opt.update(grads, opt_state, params, step)
+            params = apply_updates(params, updates)
         metrics = dict(metrics, grad_norm=clip_stats.global_norm,
                        clip_rate=clip_stats.clipped)
         return params, opt_state, comp_state, metrics
@@ -54,8 +87,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
     batch_spec = P(axis_name)
     return shard_map(
         local_step, mesh=mesh,
-        in_specs=(rep, rep, rep, batch_spec, rep),
-        out_specs=(rep, rep, rep, rep),
+        in_specs=(rep, state_spec, rep, batch_spec, rep),
+        out_specs=(rep, state_spec, rep, rep),
         check_rep=False)
 
 

@@ -21,17 +21,36 @@ from repro.models.model import forward, loss_fn
 
 
 def optimizer_launches(opt: Optimizer, params, step: int = 0) -> int:
-    """Kernel (``pallas_call``) launches one ``opt.update`` costs per step —
-    the quantity the shape-bucketed fused engine minimises: per-leaf kernels
+    """Kernel (``pallas_call``) launches one optimizer step costs — the
+    quantity the shape-bucketed fused engine minimises: per-leaf kernels
     launch once per matrix parameter, the fused path once per shape bucket.
-    Pure tracing (abstract values); nothing is compiled or executed."""
+    Traces ``opt.update_apply`` when the optimizer carries the single-pass
+    path, else ``opt.update``.  Pure tracing (abstract values); nothing is
+    compiled or executed."""
     from repro.kernels.ops import count_pallas_calls
 
     abstract = lambda t: jax.tree_util.tree_map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
     state = jax.eval_shape(opt.init, params)
+    fn = opt.update_apply if opt.update_apply is not None else opt.update
     return count_pallas_calls(
-        opt.update, abstract(params), state, abstract(params), jnp.int32(step))
+        fn, abstract(params), state, abstract(params), jnp.int32(step))
+
+
+def optimizer_fp32_buffers(opt: Optimizer, params, shape,
+                           step: int = 0) -> int:
+    """Number of full-size fp32 buffers of exactly ``shape`` the optimizer
+    step materializes (jaxpr equation outputs, recursive) — used to verify
+    the single-pass fused-apply path never writes the fp32 ``d`` bucket the
+    two-pass engine does."""
+    from repro.kernels.ops import count_buffer_eqns
+
+    abstract = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    state = jax.eval_shape(opt.init, params)
+    fn = opt.update_apply if opt.update_apply is not None else opt.update
+    return count_buffer_eqns(fn, shape, jnp.float32, abstract(params), state,
+                             abstract(params), jnp.int32(step))
 
 
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, clip_norm: float = 1.0,
@@ -69,8 +88,13 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, clip_norm: float = 1.0,
             grads, metrics = grads_of(params, batch)
 
         grads, clip_stats = clip_by_global_norm(grads, clip_norm)
-        updates, opt_state = opt.update(grads, opt_state, params, step)
-        params = apply_updates(params, updates)
+        if opt.update_apply is not None:
+            # single-pass fused apply: the kernel emits the new weights
+            # directly — no updates tree, no apply_updates pass
+            params, opt_state = opt.update_apply(grads, opt_state, params, step)
+        else:
+            updates, opt_state = opt.update(grads, opt_state, params, step)
+            params = apply_updates(params, updates)
         metrics = dict(metrics, grad_norm=clip_stats.global_norm,
                        clip_rate=clip_stats.clipped)
         return params, opt_state, metrics

@@ -1,0 +1,119 @@
+"""Subprocess worker for the ZeRO-1 optimizer-state sharding tests.
+
+Runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (set by
+the parent test — the flag must be in place before jax initializes, which
+is why this cannot run in the main pytest process).  Exercises:
+
+  * a 4-way ``data`` mesh over a synthetic bucketed tree: per-rank stacked
+    momentum holds exactly ``L/N`` slices (bytes shrink N x), an uneven-L
+    bucket falls back to replication, and the sharded single-pass step is
+    bit-identical to the replicated one;
+  * the full ``make_dp_train_step(shard_state=True)`` path on a reduced
+    GPT-2 model over a 2-way mesh: params after one update match the
+    replicated step exactly and the divisible buckets are halved per rank.
+
+Prints ``ZERO_SHARD_OK`` as the last line on success; any assertion error
+fails the subprocess (and therefore the parent test).
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.experimental.shard_map import shard_map  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import constant, mixed_optimizer  # noqa: E402
+from repro.core.rmnp import rmnp  # noqa: E402
+from repro.core.types import tree_paths  # noqa: E402
+from repro.distributed.sharding import bucket_specs  # noqa: E402
+
+
+def synthetic_four_way():
+    assert len(jax.devices()) >= 4, f"need 4 CPU devices, got {jax.devices()}"
+    mesh = jax.make_mesh((4,), ("data",))
+    shapes = {f"l{i}/w": (2, 8, 16) for i in range(4)}  # bucket 8x16, L=8
+    shapes["odd/w"] = (3, 8, 24)                        # L=3: uneven -> replicated
+
+    def make(seed):
+        return {k: jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(seed), i), s, jnp.float32)
+            for i, (k, s) in enumerate(sorted(shapes.items()))}
+
+    params, grads = make(0), make(1)
+    opt_sh = rmnp(constant(0.1), beta=0.9, fused_apply=True, shard_axis="data")
+    opt_rep = rmnp(constant(0.1), beta=0.9, fused_apply=True)
+    state = opt_sh.init(params)
+    sspec = bucket_specs(state, mesh)
+    step_sh = jax.jit(shard_map(
+        lambda g, s, p: opt_sh.update_apply(g, s, p, 0), mesh=mesh,
+        in_specs=(P(), sspec, P()), out_specs=(P(), sspec), check_rep=False))
+    p_sh, s_sh = step_sh(grads, state, params)
+    p_rep, s_rep = jax.jit(opt_rep.update_apply)(
+        grads, opt_rep.init(params), params, 0)
+
+    for k in p_sh:
+        np.testing.assert_array_equal(np.asarray(p_sh[k]), np.asarray(p_rep[k]),
+                                      err_msg=f"sharded != replicated: {k}")
+    # divisible bucket: each rank holds L/N = 8/4 = 2 slices -> bytes / 4
+    shard = s_sh.buckets["8x16"].addressable_shards[0].data
+    assert shard.shape == (2, 8, 16), shard.shape
+    assert shard.nbytes * 4 == s_sh.buckets["8x16"].nbytes
+    # uneven bucket: replicated fallback, full L on every rank
+    odd = s_sh.buckets["8x24"].addressable_shards[0].data
+    assert odd.shape == (3, 8, 24), odd.shape
+    for k in s_sh.buckets:
+        np.testing.assert_array_equal(np.asarray(s_sh.buckets[k]),
+                                      np.asarray(s_rep.buckets[k]),
+                                      err_msg=f"momentum mismatch: {k}")
+    print("synthetic 4-way: OK")
+
+
+def dp_step_two_way():
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.train.dp_step import init_dp_state, make_dp_train_step
+
+    mesh = jax.make_mesh((2,), ("data",))
+    cfg = get_config("gpt2-60m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+
+    opt_sh = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                             fused_apply=True, shard_axis="data")
+    opt_rep = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                              fused_apply=True)
+    st_sh, st_rep = opt_sh.init(params), opt_rep.init(params)
+    comp = init_dp_state(params)
+
+    step_sh = jax.jit(make_dp_train_step(
+        cfg, opt_sh, mesh, shard_state=True, opt_state=st_sh, compress=False))
+    step_rep = jax.jit(make_dp_train_step(cfg, opt_rep, mesh, compress=False))
+    p1, s1, _, m1 = step_sh(params, st_sh, comp, batch, jnp.int32(0))
+    p2, s2, _, _ = step_rep(params, st_rep, comp, batch, jnp.int32(0))
+    for (k, a), (_, b) in zip(tree_paths(p1), tree_paths(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32), err_msg=k)
+    assert np.isfinite(float(np.asarray(m1["loss"])))
+    sharded_bytes = sum(b.addressable_shards[0].data.nbytes
+                       for b in s1.buckets.values())
+    global_bytes = sum(b.nbytes for b in s1.buckets.values())
+    # buckets with even L halve per-rank; the L=1 embed bucket replicates
+    assert sharded_bytes < global_bytes, (sharded_bytes, global_bytes)
+    per_rank = {k: b.addressable_shards[0].data.shape[0]
+                for k, b in s1.buckets.items()}
+    glob = {k: b.shape[0] for k, b in s1.buckets.items()}
+    for k in glob:
+        expect = glob[k] // 2 if glob[k] % 2 == 0 else glob[k]
+        assert per_rank[k] == expect, (k, per_rank[k], glob[k])
+    print(f"dp 2-way: OK (per-rank bucket bytes {sharded_bytes} "
+          f"of {global_bytes} global)")
+
+
+if __name__ == "__main__":
+    synthetic_four_way()
+    dp_step_two_way()
+    print("ZERO_SHARD_OK")

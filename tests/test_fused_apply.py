@@ -1,0 +1,339 @@
+"""Single-pass fused apply (the update folded into the RMNP kernel) and
+ZeRO-1 optimizer-state sharding.
+
+Invariants under test:
+  * the fused-apply path (``Optimizer.update_apply``) is bit-for-bit with
+    fp32 storage against the two-pass update + apply_updates reference,
+    jitted, on both the XLA and interpret-mode Pallas backends;
+  * it materializes strictly fewer full-bucket fp32 buffers than the
+    two-pass path, and its ``pallas_call`` no longer emits the fp32 ``d``
+    bucket (with bf16 momentum the kernel's only fp32 bucket-shaped output
+    is the updated weights);
+  * kernel launches stay one per shape bucket;
+  * bf16 momentum storage drifts boundedly from fp32 storage over a ~50
+    step fused-apply run;
+  * ZeRO-1 sharding over a real multi-device CPU mesh: per-rank stacked
+    momentum bytes shrink N x and the sharded step matches the replicated
+    step bit-for-bit (subprocess — the device-count flag must precede jax
+    init);
+  * train steps dispatch on ``update_apply`` and the dp step validates its
+    sharding preconditions.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apply_updates, constant, mixed_optimizer
+from repro.core.bucketing import build_plan
+from repro.core.rmnp import rmnp
+from repro.train.step import optimizer_fp32_buffers, optimizer_launches
+
+RAGGED_SHAPES = {
+    "layer_0/w_in": (8, 16),
+    "layer_1/w_in": (8, 16),
+    "stack/w_in": (3, 8, 16),     # scan/expert leading axis
+    "layer_0/w_out": (16, 8),
+    "odd/w": (24, 9),             # 9 % block_n != 0 -> padded stripe
+}
+
+
+def make_tree(shapes, seed=0, with_vectors=False):
+    tree = {k: jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(seed), i), shape, jnp.float32)
+        for i, (k, shape) in enumerate(sorted(shapes.items()))}
+    if with_vectors:
+        tree["norm"] = jax.random.normal(jax.random.PRNGKey(seed + 900), (8,))
+        tree["bias"] = jax.random.normal(jax.random.PRNGKey(seed + 901), (16,))
+    return tree
+
+
+class TestSinglePassBitwise:
+    """Both paths jitted: the jit boundary is where they run in production,
+    and identical compilation granularity is what makes fp32 bit-parity a
+    fair claim (eagerly, XLA fuses the two-pass epilogue differently)."""
+
+    @pytest.mark.parametrize("use_kernel", [False, True],
+                             ids=["xla", "pallas-interpret"])
+    def test_rmnp_matches_two_pass(self, use_kernel):
+        params = make_tree(RAGGED_SHAPES)
+        two = rmnp(constant(0.1), beta=0.9, use_kernel=use_kernel, fused=True)
+        one = rmnp(constant(0.1), beta=0.9, use_kernel=use_kernel,
+                   fused_apply=True)
+
+        @jax.jit
+        def two_pass(g, s, p, step):
+            u, s2 = two.update(g, s, p, step)
+            return apply_updates(p, u), s2
+
+        one_pass = jax.jit(one.update_apply)
+        sr, sf = two.init(params), one.init(params)
+        pr, pf = params, params
+        for step in range(3):
+            grads = make_tree(RAGGED_SHAPES, seed=100 + step)
+            pr, sr = two_pass(grads, sr, pr, jnp.int32(step))
+            pf, sf = one_pass(grads, sf, pf, jnp.int32(step))
+            for k in pr:
+                np.testing.assert_array_equal(
+                    np.asarray(pr[k]), np.asarray(pf[k]),
+                    err_msg=f"{k} (use_kernel={use_kernel}, step={step})")
+            for k in sr.buckets:
+                np.testing.assert_array_equal(
+                    np.asarray(sr.buckets[k]), np.asarray(sf.buckets[k]))
+
+    @pytest.mark.parametrize("use_kernel", [False, True],
+                             ids=["xla", "pallas-interpret"])
+    def test_mixed_matches_two_pass(self, use_kernel):
+        params = make_tree(RAGGED_SHAPES, with_vectors=True)
+        two = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                              use_kernel=use_kernel, fused=True)
+        one = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                              use_kernel=use_kernel, fused_apply=True)
+
+        @jax.jit
+        def two_pass(g, s, p, step):
+            u, s2 = two.update(g, s, p, step)
+            return apply_updates(p, u), s2
+
+        one_pass = jax.jit(one.update_apply)
+        sr, sf = two.init(params), one.init(params)
+        pr, pf = params, params
+        for step in range(3):
+            grads = make_tree(RAGGED_SHAPES, seed=100 + step,
+                              with_vectors=True)
+            pr, sr = two_pass(grads, sr, pr, jnp.int32(step))
+            pf, sf = one_pass(grads, sf, pf, jnp.int32(step))
+            for k in pr:
+                np.testing.assert_array_equal(
+                    np.asarray(pr[k]), np.asarray(pf[k]),
+                    err_msg=f"{k} (use_kernel={use_kernel}, step={step})")
+
+    def test_mixed_dtype_bucket_keeps_leaf_dtypes(self):
+        """Leaves of different dtypes sharing a shape bucket promote when
+        the params gather concatenates; update_apply must cast each slice
+        back so param dtypes stay stable across steps (no recompiles)."""
+        params = {"a/w": jnp.zeros((8, 16), jnp.bfloat16),
+                  "b/w": jnp.zeros((8, 16), jnp.float32)}
+        grads = make_tree({"a/w": (8, 16), "b/w": (8, 16)}, seed=3)
+        opt = rmnp(constant(0.1), fused_apply=True)
+        new_params, _ = jax.jit(opt.update_apply)(
+            grads, opt.init(params), params, jnp.int32(0))
+        assert new_params["a/w"].dtype == jnp.bfloat16
+        assert new_params["b/w"].dtype == jnp.float32
+
+    def test_fused_apply_implies_fused(self):
+        opt = rmnp(constant(0.1), fused_apply=True)
+        assert opt.update_apply is not None
+        state = opt.init(make_tree(RAGGED_SHAPES))
+        assert hasattr(state, "buckets")
+        # plain fused keeps the two-pass-only contract
+        assert rmnp(constant(0.1), fused=True).update_apply is None
+
+    def test_shard_axis_implies_fused_apply(self):
+        """shard_axis without update_apply would silently replicate the
+        state, so setting it must enable the single-pass path."""
+        assert rmnp(constant(0.1), shard_axis="data").update_apply is not None
+        assert mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                               shard_axis="data").update_apply is not None
+
+
+class TestNoFp32Intermediate:
+    """The single-pass engine's memory claim, verified by tracing."""
+
+    def test_fewer_full_bucket_fp32_buffers(self):
+        params = make_tree({"a/w": (8, 16), "b/w": (8, 16), "c/w": (2, 8, 16)})
+        bucket_shape = (4, 8, 16)
+        two = optimizer_fp32_buffers(
+            rmnp(constant(0.1), use_kernel=True, fused=True), params,
+            bucket_shape)
+        one = optimizer_fp32_buffers(
+            rmnp(constant(0.1), use_kernel=True, fused_apply=True), params,
+            bucket_shape)
+        assert one < two, (one, two)
+
+    def test_kernel_emits_no_fp32_d_bucket(self):
+        """With bf16 momentum AND bf16 params, the two-pass kernel's only
+        fp32 output is the ``d`` bucket; the fused-apply kernel must have no
+        fp32 bucket-shaped output at all."""
+        from repro.kernels.ops import _walk_eqns
+
+        shapes = {"a/w": (8, 16), "b/w": (8, 16), "c/w": (2, 8, 16)}
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16), make_tree(shapes))
+        L = 4
+
+        def pallas_fp32_outputs(opt, fn_name):
+            fn = getattr(opt, fn_name)
+            abstract = lambda t: jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+            state = jax.eval_shape(opt.init, params)
+            closed = jax.make_jaxpr(fn)(abstract(params), state,
+                                        abstract(params), jnp.int32(0))
+
+            def visit(eqn):
+                if eqn.primitive.name != "pallas_call":
+                    return 0
+                return sum(1 for v in eqn.outvars
+                           if v.aval.dtype == jnp.float32
+                           and len(v.aval.shape) == 3
+                           and v.aval.shape[0] == L)
+
+            return _walk_eqns(closed.jaxpr, visit)
+
+        two = rmnp(constant(0.1), use_kernel=True, fused=True,
+                   momentum_dtype="bfloat16")
+        one = rmnp(constant(0.1), use_kernel=True, fused_apply=True,
+                   momentum_dtype="bfloat16")
+        assert pallas_fp32_outputs(two, "update") == 1      # the d bucket
+        assert pallas_fp32_outputs(one, "update_apply") == 0
+
+    def test_launches_stay_one_per_bucket(self):
+        params = make_tree(RAGGED_SHAPES)
+        n_buckets = len(build_plan(params).buckets)
+        one = rmnp(constant(0.1), use_kernel=True, fused_apply=True)
+        assert optimizer_launches(one, params) == n_buckets == 3
+        mixed = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                                use_kernel=True, fused_apply=True)
+        assert optimizer_launches(
+            mixed, make_tree(RAGGED_SHAPES, with_vectors=True)) == 3
+
+
+class TestBf16MomentumDrift:
+    def test_bounded_drift_over_50_fused_apply_steps(self):
+        """bf16 momentum storage (fp32 math) must track the fp32-storage
+        trajectory to within bf16 rounding accumulation — bounded, not
+        divergent — over a multi-step fused-apply run."""
+        shapes = {"a/w": (8, 16), "b/w": (16, 8), "s/w": (2, 8, 16)}
+        params = make_tree(shapes)
+        o32 = rmnp(constant(0.05), beta=0.9, fused_apply=True)
+        o16 = rmnp(constant(0.05), beta=0.9, fused_apply=True,
+                   momentum_dtype="bfloat16")
+        s32, s16 = o32.init(params), o16.init(params)
+        step32 = jax.jit(o32.update_apply)
+        step16 = jax.jit(o16.update_apply)
+        p32, p16 = params, params
+        for step in range(50):
+            grads = make_tree(shapes, seed=1000 + step)
+            p32, s32 = step32(grads, s32, p32, jnp.int32(step))
+            p16, s16 = step16(grads, s16, p16, jnp.int32(step))
+        for k in p32:
+            a, b = np.asarray(p32[k]), np.asarray(p16[k])
+            drift = np.max(np.abs(a - b))
+            # row-normalized updates are O(lr) per step; 50 steps of bf16
+            # momentum rounding must stay well under one update's magnitude
+            assert drift < 0.05, f"{k}: drift {drift}"
+            assert np.all(np.isfinite(b))
+
+
+class TestZeroSharding:
+    def test_sharded_step_matches_replicated_subprocess(self):
+        """4-device CPU mesh: per-rank momentum = L/N slices (bytes shrink
+        N x), uneven-L buckets replicate, sharded == replicated bitwise,
+        and the full dp train step agrees end-to-end on a 2-way mesh."""
+        worker = Path(__file__).parent / "_zero_shard_worker.py"
+        env = dict(os.environ,
+                   XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                              " --xla_force_host_platform_device_count=4").strip(),
+                   JAX_PLATFORMS="cpu",
+                   PYTHONPATH=os.pathsep.join(
+                       [str(Path(__file__).resolve().parents[1] / "src"),
+                        os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+        out = subprocess.run([sys.executable, str(worker)], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, f"worker failed:\n{out.stdout}\n{out.stderr}"
+        assert "ZERO_SHARD_OK" in out.stdout
+
+    def test_shard_state_requires_fused_apply(self):
+        from repro.configs import get_config
+        from repro.train.dp_step import make_dp_train_step
+
+        mesh = jax.make_mesh((1,), ("data",))
+        cfg = get_config("gpt2-60m").reduced()
+        two_pass = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                                   fused=True)
+        with pytest.raises(ValueError, match="fused-apply"):
+            make_dp_train_step(cfg, two_pass, mesh, shard_state=True)
+
+    def test_shard_state_requires_state_example(self):
+        from repro.configs import get_config
+        from repro.train.dp_step import make_dp_train_step
+
+        mesh = jax.make_mesh((1,), ("data",))
+        cfg = get_config("gpt2-60m").reduced()
+        opt = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                              fused_apply=True, shard_axis="data")
+        with pytest.raises(ValueError, match="opt_state"):
+            make_dp_train_step(cfg, opt, mesh, shard_state=True)
+
+    def test_bucket_specs_ignores_param_paths_named_buckets(self):
+        """Only the state's top-level `buckets` field is stacked momentum:
+        a 3-D AdamW state leaf whose *parameter* path contains 'buckets'
+        (under momentum/nu) must stay replicated, not get a ZeRO spec."""
+        from repro.distributed.sharding import bucket_specs
+
+        mesh = jax.make_mesh((1,), ("data",))
+        shapes = dict(RAGGED_SHAPES)
+        params = make_tree(shapes)
+        # 'conv' token routes this 3-D leaf to AdamW (full-shape mu/nu)
+        params["rel_pos_buckets/conv"] = jnp.zeros((4, 3, 64))
+        opt = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                              fused_apply=True)
+        state = opt.init(params)
+        assert state.momentum["rel_pos_buckets/conv"].shape == (4, 3, 64)
+        specs = bucket_specs(state, mesh)
+        # bucket leaves go through spec_for (rank-3 spec, possibly all-None
+        # on a tiny mesh); everything else must take the bare-P() branch
+        assert all(len(s) == 3 for s in specs.buckets.values())
+        assert len(specs.momentum["rel_pos_buckets/conv"]) == 0
+        assert len(specs.nu["rel_pos_buckets/conv"]) == 0
+
+    def test_bucket_specs_uneven_replicates(self):
+        from repro.distributed.sharding import bucket_specs
+
+        mesh = jax.make_mesh((1,), ("data",))
+        opt = rmnp(constant(0.1), fused_apply=True)
+        state = opt.init(make_tree(RAGGED_SHAPES))
+        specs = bucket_specs(state, mesh)
+        # size-1 mesh axis: every bucket falls back to replication
+        assert all(all(ax is None for ax in s)
+                   for s in specs.buckets.values())
+
+
+class TestTrainStepDispatch:
+    def test_end_to_end_fused_apply_train(self):
+        from repro.launch.train import train
+
+        _, opt_state, hist = train("gpt2-60m", "rmnp", steps=4, batch=2,
+                                   seq=16, fused_apply=True, log_every=2)
+        assert hasattr(opt_state, "buckets") and opt_state.buckets
+        assert all(np.isfinite(h["loss"]) for h in hist)
+
+    def test_pjit_step_uses_update_apply(self):
+        """make_train_step must route through update_apply when present:
+        the two optimizers share math, so one fused-apply step from the same
+        state must equal the two-pass step bit-for-bit (fp32 model)."""
+        from repro.configs import get_config
+        from repro.models import init_params
+        from repro.train.step import make_train_step
+
+        cfg = get_config("gpt2-60m").reduced(dtype="float32")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  cfg.vocab)
+        batch = {"tokens": toks, "labels": toks}
+        outs = {}
+        for name, kw in (("two", dict(fused=True)),
+                         ("one", dict(fused_apply=True))):
+            opt = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2), **kw)
+            step = jax.jit(make_train_step(cfg, opt, remat="none"))
+            outs[name] = step(params, opt.init(params), batch, jnp.int32(0))
+        from repro.core.types import tree_paths
+        for (k, a), (_, b) in zip(tree_paths(outs["two"][0]),
+                                  tree_paths(outs["one"][0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=k)

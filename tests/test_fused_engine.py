@@ -82,6 +82,38 @@ class TestBucketPlan:
         with pytest.raises(ValueError, match="changed shape"):
             gather(plan, tree)
 
+    def test_missing_leaf_names_path_and_bucket(self):
+        """A planned path absent from the tree (e.g. after a params
+        refactor) must raise a ValueError naming the missing path and the
+        plan's bucket key, not a bare KeyError."""
+        tree = make_tree(RAGGED_SHAPES)
+        plan = build_plan(tree)
+        del tree["odd/w"]
+        with pytest.raises(ValueError, match=r"odd/w.*24x9"):
+            gather(plan, tree)
+
+    def test_expert_axes_roundtrip(self):
+        """Leaves with several leading axes — e.g. (experts, layers, d, 4d)
+        MoE stacks — flatten into lead = experts * layers bucket slices and
+        must scatter back exactly."""
+        shapes = {
+            "moe/w_in": (2, 3, 4, 16),    # experts x layers x d x 4d
+            "dense/w_in": (4, 16),
+            "moe/w_out": (2, 3, 16, 4),
+        }
+        tree = make_tree(shapes)
+        plan = build_plan(tree)
+        keys = {b.key: b for b in plan.buckets}
+        assert keys["4x16"].size == 2 * 3 + 1
+        assert keys["16x4"].size == 2 * 3
+        stacked = gather(plan, tree)
+        assert stacked["4x16"].shape == (7, 4, 16)
+        back = scatter(plan, stacked,
+                       jax.tree_util.tree_map(jnp.zeros_like, tree))
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(back[k]),
+                                          np.asarray(tree[k]))
+
 
 def _run_pair(shapes, use_kernel, steps=3, seed=0, **kw):
     """(per-leaf updates, fused updates) trajectories over a few steps."""
@@ -227,6 +259,24 @@ class TestPickBlockN:
         bn = pick_block_n(32768, 4096)
         assert self._fits(32768, bn)
         assert bn < 128
+
+    @pytest.mark.parametrize("d_in,n", [(64, 1024), (1024, 4096),
+                                        (8192, 512), (32768, 4096)])
+    def test_stripe_count_parameterizes_budget(self, d_in, n):
+        """The fused-apply kernel holds 6 fp32 stripes (g, v, w in; v_new,
+        w_new out; d in-register) vs the precondition-only kernel's 4, so
+        its blocks can only be smaller-or-equal at the same budget."""
+        bn4 = pick_block_n(d_in, n, stripes=4)
+        bn6 = pick_block_n(d_in, n, stripes=6)
+        assert bn6 <= bn4
+        assert 6 * d_in * bn6 * 4 <= VMEM_BUDGET or bn6 == 8
+
+    def test_stripe_budget_shrinks_block(self):
+        # d_in * bn budget is 786432 elements at 4 stripes, 524288 at 6:
+        # 12288-fan-in fits a 64-wide block under 4 stripes but needs 32
+        # under 6 — the apply kernel's extra residency must shrink blocks
+        assert pick_block_n(12288, 4096, stripes=4) == 64
+        assert pick_block_n(12288, 4096, stripes=6) == 32
 
 
 class TestDominanceParity:

@@ -217,6 +217,54 @@ def bench_fused_apply(name: str, layers: int, d: int, iters: int) -> Dict:
     }
 
 
+def bench_zero2(name: str, layers: int, d: int, n_dev: int) -> Dict:
+    """ZeRO-0/1/2 per-rank memory and wire-byte accounting for the bucketed
+    matrix partition, analytic (exact — these are byte counts, not timings).
+
+    The model's matrix partition buckets into the 4 per-layer shapes, each
+    with ``L = layers`` stacked slices, padded to the axis size under
+    ZeRO-1/2 (``core/bucketing.py``).  Per step and per rank:
+
+    * ZeRO-0: full fp32 mean-grad bucket + full momentum; ring all-reduce.
+    * ZeRO-1: full mean-grad bucket, momentum sharded ``/N``; all-reduce
+      plus the updated-param-slice all-gather.
+    * ZeRO-2: grad reduce-scattered straight into the shard — grad bucket
+      *and* momentum both ``/N``; reduce-scatter + param all-gather moves
+      the same bytes as one all-reduce, so the memory win is free.
+
+    The int8 columns use the error-feedback schedule of
+    ``distributed/compression.py``: a2a int8 + fp32 block scales (+ bf16
+    gather for the mean variants; the ZeRO-2 reduce-scatter drops that
+    stage entirely)."""
+    shapes = [(shape, layers) for shape, _ in layer_matrix_shapes(d)]
+    n = sum(L * m * k for (m, k), L in shapes)
+    n_pad = sum(-(-L // n_dev) * n_dev * m * k for (m, k), L in shapes)
+    frac = (n_dev - 1) / n_dev
+    scales = 4.0 * n / 512          # one fp32 scale per 512-elem block
+    scales_pad = 4.0 * n_pad / 512  # the ZeRO-2 path quantizes padded chunks
+    # ZeRO-1 gathers the full mean-grad bucket per rank (padded, since the
+    # sharded optimizer pads); ZeRO-0 runs the unpadded replicated plan
+    grad = {"zero0": 4.0 * n, "zero1": 4.0 * n_pad,
+            "zero2": 4.0 * n_pad / n_dev}
+    state = {"zero0": 4.0 * n, "zero1": 4.0 * n_pad / n_dev,
+             "zero2": 4.0 * n_pad / n_dev}
+    gather_w = 4.0 * n_pad * frac  # updated param slices, fp32
+    # the ZeRO-0/1 reduction runs per-leaf (unpadded n on the wire; ZeRO-1
+    # pads only at the local gather); ZeRO-2 reduce-scatters padded chunks
+    wire = {"zero0": 2 * 4.0 * n * frac,
+            "zero1": 2 * 4.0 * n * frac + gather_w,
+            "zero2": 4.0 * n_pad * frac + gather_w}
+    wire_int8 = {"zero0": (1.0 * n + scales) * frac + 2.0 * n * frac,
+                 "zero1": (1.0 * n + scales) * frac + 2.0 * n * frac + gather_w,
+                 "zero2": (1.0 * n_pad + scales_pad) * frac + gather_w}
+    return {"bench": "zero2", "size": name, "layers": layers, "d_model": d,
+            "n_dev": n_dev, "matrix_elems": n, "matrix_elems_padded": n_pad,
+            **{f"grad_bucket_bytes_{z}": grad[z] for z in grad},
+            **{f"state_bytes_{z}": state[z] for z in state},
+            **{f"wire_bytes_{z}": wire[z] for z in wire},
+            **{f"wire_bytes_int8_{z}": wire_int8[z] for z in wire_int8}}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", nargs="*", default=None)
@@ -238,6 +286,12 @@ def main(argv=None):
     ap.add_argument("--fused-layers", type=int, default=4,
                     help="layer count for the fused section (0 = the size's "
                          "real depth; capped by default to bound memory)")
+    ap.add_argument("--zero2", action="store_true",
+                    help="emit the ZeRO-0/1/2 per-rank grad-bucket / "
+                         "momentum / wire-byte accounting "
+                         "(BENCH_zero2.json; analytic, exact)")
+    ap.add_argument("--zero2-ranks", type=int, default=8,
+                    help="data-axis size N for the --zero2 accounting")
     args = ap.parse_args(argv)
 
     sizes = args.sizes or list(GPT2_SIZES)
@@ -289,6 +343,27 @@ def main(argv=None):
         print_table(["size", "two-pass ms", "1-pass ms", "speedup",
                      "fp32 bufs 2p", "fp32 bufs 1p"], arows)
         write_artifact("BENCH_fused_step", arecs)
+
+    if args.zero2:
+        zrows, zrecs = [], []
+        mb = 1.0 / 2**20
+        for name in sizes:
+            layers, d = GPT2_SIZES[name]
+            zr = bench_zero2(name, layers, d, args.zero2_ranks)
+            recs.append(zr)
+            zrecs.append(zr)
+            zrows.append([name] +
+                         [f"{zr[f'grad_bucket_bytes_{z}'] * mb:.1f}"
+                          for z in ("zero0", "zero1", "zero2")] +
+                         [f"{zr[f'state_bytes_{z}'] * mb:.1f}"
+                          for z in ("zero0", "zero1", "zero2")] +
+                         [f"{zr[f'wire_bytes_int8_{z}'] * mb:.1f}"
+                          for z in ("zero0", "zero1", "zero2")])
+        print(f"\n== ZeRO sharding: per-rank MiB (N={args.zero2_ranks}) ==")
+        print_table(["size", "grad z0", "grad z1", "grad z2",
+                     "mom z0", "mom z1", "mom z2",
+                     "wire8 z0", "wire8 z1", "wire8 z2"], zrows)
+        write_artifact("BENCH_zero2", zrecs)
 
     write_artifact("precond_time", recs)
     return recs

@@ -21,6 +21,7 @@ ideal for buffer donation and for per-bucket sharding later.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -42,6 +43,16 @@ class Bucket(NamedTuple):
     d_out: int
     size: int                  # L — total stacked slices across all entries
     entries: Tuple[BucketEntry, ...]
+    # L rounded up to the plan's pad multiple (the ZeRO shard-axis size):
+    # stacked buffers are allocated at padded_size so *every* bucket divides
+    # the axis; pad slices carry zero grad/momentum and are dropped by
+    # scatter.  0 (the default, for plans built before padding existed)
+    # means "no padding", i.e. == size.
+    padded_size: int = 0
+
+    @property
+    def padded(self) -> int:
+        return self.padded_size or self.size
 
 
 class BucketPlan(NamedTuple):
@@ -50,6 +61,39 @@ class BucketPlan(NamedTuple):
     @property
     def n_leaves(self) -> int:
         return sum(len(b.entries) for b in self.buckets)
+
+    @property
+    def paths(self) -> frozenset:
+        """Leaf paths the plan covers (the matrix partition)."""
+        return frozenset(e.path for b in self.buckets for e in b.entries)
+
+
+class PlanCache:
+    """Tiny LRU for leaf->bucket plans keyed on :func:`plan_signature`.
+
+    One optimizer instance can serve many parameter trees (a long-lived
+    serving process cycling adapters, eval harnesses sweeping model sizes);
+    an unbounded dict would leak plan metadata for every signature ever
+    seen.  Plans are cheap to rebuild, so a small LRU loses nothing."""
+
+    def __init__(self, maxsize: int = 8):
+        if maxsize < 1:
+            raise ValueError(f"PlanCache needs maxsize >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self._plans: OrderedDict = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def get(self, key, build: Callable[[], "BucketPlan"]) -> "BucketPlan":
+        if key in self._plans:
+            self._plans.move_to_end(key)
+            return self._plans[key]
+        plan = build()
+        self._plans[key] = plan
+        while len(self._plans) > self.maxsize:
+            self._plans.popitem(last=False)
+        return plan
 
 
 def bucket_key(d_in: int, d_out: int) -> str:
@@ -73,10 +117,19 @@ def plan_signature(params: PyTree,
 
 def build_plan(params: PyTree,
                predicate: Optional[Callable[[str, jax.Array], bool]] = None,
-               strict: bool = False) -> BucketPlan:
+               strict: bool = False, pad_multiple: int = 1) -> BucketPlan:
     """Group leaves selected by ``predicate`` (default: ``ndim >= 2``) into
     ``(d_in, d_out)`` buckets.  ``strict=True`` raises on any rejected leaf
-    (used by the pure-matrix ``rmnp`` optimizer, which has no AdamW side)."""
+    (used by the pure-matrix ``rmnp`` optimizer, which has no AdamW side).
+
+    ``pad_multiple`` (the ZeRO shard-axis size) rounds every bucket's
+    stacked ``L`` up to a multiple, so uneven buckets shard instead of
+    falling back to replication: pad slices are zero-filled by
+    :func:`gather`, stay identically zero through the RMNP update (zero
+    grad -> zero momentum -> the row-normalize eps floor keeps ``d`` zero),
+    and are never read back by :func:`scatter`."""
+    if pad_multiple < 1:
+        raise ValueError(f"pad_multiple must be >= 1, got {pad_multiple}")
     groups: Dict[Tuple[int, int], list] = {}
     for path, leaf in tree_paths(params):
         is_mat = (predicate(path, leaf) if predicate is not None
@@ -97,45 +150,132 @@ def build_plan(params: PyTree,
             entries.append(BucketEntry(path=path, shape=shape,
                                        lead=lead, offset=offset))
             offset += lead
+        padded = -(-offset // pad_multiple) * pad_multiple
         buckets.append(Bucket(key=bucket_key(d_in, d_out), d_in=d_in,
                               d_out=d_out, size=offset,
-                              entries=tuple(entries)))
+                              entries=tuple(entries), padded_size=padded))
     return BucketPlan(buckets=tuple(buckets))
 
 
 def init_buckets(plan: BucketPlan, dtype=jnp.float32) -> Dict[str, jax.Array]:
-    """Zero-initialised stacked momentum, one ``(L, d_in, d_out)`` buffer per
-    bucket (the whole matrix-partition optimizer state)."""
-    return {b.key: jnp.zeros((b.size, b.d_in, b.d_out), dtype)
+    """Zero-initialised stacked momentum, one ``(padded L, d_in, d_out)``
+    buffer per bucket (the whole matrix-partition optimizer state)."""
+    return {b.key: jnp.zeros((b.padded, b.d_in, b.d_out), dtype)
             for b in plan.buckets}
 
 
+def _bucket_parts(bucket: Bucket, by_path, dtype=None):
+    """The planned leaves of one bucket as ``(lead, d_in, d_out)`` slabs (in
+    entry order, shapes validated) plus the dtype pads must be created in."""
+    parts = []
+    for e in bucket.entries:
+        leaf = by_path.get(e.path)
+        if leaf is None:
+            raise ValueError(
+                f"bucket plan references leaf {e.path!r} (bucket "
+                f"{bucket.key!r}) but the tree has no such path — was the "
+                f"plan built for a different params tree?")
+        if leaf.shape != e.shape:
+            raise ValueError(f"leaf {e.path!r} changed shape: plan has "
+                             f"{e.shape}, tree has {leaf.shape}")
+        part = leaf.reshape(e.lead, bucket.d_in, bucket.d_out)
+        parts.append(part.astype(dtype) if dtype is not None else part)
+    pad_dtype = dtype if dtype is not None else jnp.result_type(
+        *[p.dtype for p in parts])
+    return parts, pad_dtype
+
+
 def gather(plan: BucketPlan, tree: PyTree, dtype=None) -> Dict[str, jax.Array]:
-    """Stack the planned leaves of ``tree`` into per-bucket operands."""
+    """Stack the planned leaves of ``tree`` into per-bucket operands.  Pad
+    slices (``padded_size > size``) are zero-filled — mathematically inert
+    through the RMNP update and dropped by :func:`scatter`."""
     by_path = dict(tree_paths(tree))
     out = {}
     for b in plan.buckets:
-        parts = []
-        for e in b.entries:
-            leaf = by_path.get(e.path)
-            if leaf is None:
-                raise ValueError(
-                    f"bucket plan references leaf {e.path!r} (bucket "
-                    f"{b.key!r}) but the tree has no such path — was the "
-                    f"plan built for a different params tree?")
-            if leaf.shape != e.shape:
-                raise ValueError(f"leaf {e.path!r} changed shape: plan has "
-                                 f"{e.shape}, tree has {leaf.shape}")
-            part = leaf.reshape(e.lead, b.d_in, b.d_out)
-            parts.append(part.astype(dtype) if dtype is not None else part)
+        parts, pad_dtype = _bucket_parts(b, by_path, dtype)
+        if b.padded > b.size:
+            parts.append(jnp.zeros((b.padded - b.size, b.d_in, b.d_out),
+                                   pad_dtype))
         out[b.key] = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
     return out
+
+
+def gather_chunks(plan: BucketPlan, tree: PyTree, n_chunks: int,
+                  dtype=None) -> Dict[str, jax.Array]:
+    """Stack the planned leaves of ``tree`` into ``(n_chunks, padded_L /
+    n_chunks, d_in, d_out)`` per-bucket operands — :func:`gather` pre-split
+    along ``L`` into the per-rank chunks of an ``n_chunks``-way ZeRO axis
+    (chunk ``j`` is rank ``j``'s shard; pad slices zero-filled).
+
+    This is the ZeRO-2 gradient layout: ``all_to_all`` / ``psum_scatter``
+    consume the leading chunk axis directly, so the monolithic
+    ``(padded_L, d_in, d_out)`` bucket is never materialized — the largest
+    fp32 gradient intermediate per rank is one chunk."""
+    by_path = dict(tree_paths(tree))
+    out = {}
+    for b in plan.buckets:
+        if b.padded % n_chunks:
+            raise ValueError(
+                f"bucket {b.key!r}: padded size {b.padded} is not divisible "
+                f"by n_chunks={n_chunks} — build the plan with "
+                f"pad_multiple=n_chunks (optimizer shard_size)")
+        csize = b.padded // n_chunks
+        parts, pad_dtype = _bucket_parts(b, by_path, dtype)
+        chunks = []
+        for j in range(n_chunks):
+            lo, hi = j * csize, (j + 1) * csize
+            pieces = []
+            for e, part in zip(b.entries, parts):
+                s, t = max(lo, e.offset), min(hi, e.offset + e.lead)
+                if s < t:
+                    pieces.append(part[s - e.offset:t - e.offset])
+            filled = sum(p.shape[0] for p in pieces)
+            if filled < csize:  # tail pad of the last chunk(s)
+                pieces.append(jnp.zeros((csize - filled, b.d_in, b.d_out),
+                                        pad_dtype))
+            chunks.append(pieces[0] if len(pieces) == 1
+                          else jnp.concatenate(pieces, axis=0))
+        out[b.key] = jnp.stack(chunks, axis=0)
+    return out
+
+
+def scatter_chunks(plan: BucketPlan, chunks: Dict[str, jax.Array],
+                   base: PyTree) -> PyTree:
+    """Inverse of :func:`gather_chunks`: reassemble each planned leaf of
+    ``base`` from its pieces across the chunk axis (pad slices dropped;
+    non-planned leaves pass through untouched).  Per-leaf slicing — the
+    monolithic ``(padded_L, d_in, d_out)`` bucket is never rebuilt."""
+    from repro.core.types import map_with_path
+
+    slices = {}
+    for b in plan.buckets:
+        for e in b.entries:
+            slices[e.path] = (b, e)
+
+    def visit(path, leaf):
+        hit = slices.get(path)
+        if hit is None:
+            return leaf
+        b, e = hit
+        stacked = chunks[b.key]
+        csize = stacked.shape[1]
+        pieces = []
+        for j in range(stacked.shape[0]):
+            lo, hi = j * csize, (j + 1) * csize
+            s, t = max(lo, e.offset), min(hi, e.offset + e.lead)
+            if s < t:
+                pieces.append(stacked[j, s - lo:t - lo])
+        out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=0)
+        return out.reshape(e.shape)
+
+    return map_with_path(visit, base)
 
 
 def scatter(plan: BucketPlan, stacked: Dict[str, jax.Array],
             base: PyTree, cast: bool = False) -> PyTree:
     """Inverse of :func:`gather`: slice each bucket back into the planned
-    leaves of ``base`` (non-planned leaves pass through untouched).
+    leaves of ``base`` (non-planned leaves pass through untouched).  Pad
+    slices beyond ``size`` are never read — padded buckets scatter for free.
     ``cast=True`` restores each base leaf's dtype — needed when the bucket
     was gathered without an explicit dtype and a mixed-dtype bucket promoted
     on concatenation (the fused-apply path scatters *params*, whose dtypes
@@ -188,44 +328,110 @@ def fused_rownorm_update(plan: BucketPlan,
     return d_out, v_out
 
 
+def shard_count(bucket: Bucket, l_loc: int) -> int:
+    """Number of ZeRO shards implied by a local momentum buffer of ``l_loc``
+    slices: 1 (the full padded buffer) or ``padded_size / l_loc``.  Any
+    other ``l_loc`` is a corrupt or mismatched buffer — a stale checkpoint
+    restored onto a different mesh, or a plan rebuilt with a different
+    ``pad_multiple`` — and silently ``dynamic_slice``-ing with it would
+    produce garbage updates, so it raises instead."""
+    psize = bucket.padded
+    if l_loc < 1 or psize % l_loc:
+        raise ValueError(
+            f"bucket {bucket.key!r}: momentum buffer holds {l_loc} slices "
+            f"but the bucket stacks {bucket.size} (padded to {psize}); "
+            f"expected the full padded buffer or an exact 1/N shard with "
+            f"{psize} % l_loc == 0 — was the optimizer state restored from "
+            f"a different mesh or built with a different shard_size?")
+    return psize // l_loc
+
+
+def _apply_one(g, v, w, scale, weight_decay, beta, eps, use_kernel):
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.rmnp_bucket_update_apply(
+            g, v, w, scale, weight_decay, beta=beta, eps=eps)
+    from repro.kernels.ref import rmnp_rownorm_apply_ref
+    return rmnp_rownorm_apply_ref(
+        g, v, w, scale, weight_decay, beta=beta, eps=eps)
+
+
 def bucket_update_apply(bucket: Bucket, g: jax.Array, v: jax.Array,
                         w: jax.Array, *, scale, weight_decay: float,
                         beta: float, eps: float, use_kernel: bool = False,
                         shard_axis: Optional[str] = None):
     """Single-pass fused update of one stacked bucket, ZeRO-1 aware.
 
-    ``g`` / ``w`` are the full ``(L, d_in, d_out)`` gradient / weight
+    ``g`` / ``w`` are the full ``(padded L, d_in, d_out)`` gradient / weight
     operands (both exist per step anyway); ``v`` is the stacked momentum —
-    either the full buffer, or this rank's ``(L/N, ...)`` shard when the
-    optimizer state is ZeRO-sharded along ``L`` over ``shard_axis`` (the
-    per-bucket decision made by :func:`repro.distributed.sharding.\
-bucket_specs`, which falls back to replication on uneven ``L``).  On a
-    shard the kernel runs over the local slices only and the updated weight
+    either the full padded buffer, or this rank's ``(padded L / N, ...)``
+    shard when the optimizer state is ZeRO-sharded along ``L`` over
+    ``shard_axis`` (the per-bucket decision made by
+    :func:`repro.distributed.sharding.bucket_specs`; with a plan padded to
+    the axis size every bucket shards, uneven ``L`` included).  On a shard
+    the kernel runs over the local slices only and the updated weight
     slices are all-gathered back to the full bucket; momentum stays sharded.
+    A momentum buffer whose slice count divides nothing raises (stale state
+    / wrong mesh) instead of slicing garbage.
 
     Returns ``(w_new full, v_new in v's layout)``; no fp32 ``d`` buffer is
     materialized on either path.
     """
     l_loc = v.shape[0]
-    sharded = l_loc != bucket.size
-    if sharded:
+    n_shards = shard_count(bucket, l_loc)
+    if g.shape[0] != bucket.padded or w.shape[0] != bucket.padded:
+        raise ValueError(
+            f"bucket {bucket.key!r}: gradient/weight operands have "
+            f"{g.shape[0]}/{w.shape[0]} slices, expected the padded bucket "
+            f"size {bucket.padded}")
+    if n_shards > 1:
         if shard_axis is None:
             raise ValueError(
                 f"bucket {bucket.key!r}: momentum holds {l_loc} of "
-                f"{bucket.size} slices but no shard_axis was given")
+                f"{bucket.padded} slices but no shard_axis was given")
         idx = jax.lax.axis_index(shard_axis)
         g = jax.lax.dynamic_slice_in_dim(g, idx * l_loc, l_loc, axis=0)
         w_loc = jax.lax.dynamic_slice_in_dim(w, idx * l_loc, l_loc, axis=0)
     else:
         w_loc = w
-    if use_kernel:
-        from repro.kernels import ops as kops
-        v_new, w_new = kops.rmnp_bucket_update_apply(
-            g, v, w_loc, scale, weight_decay, beta=beta, eps=eps)
-    else:
-        from repro.kernels.ref import rmnp_rownorm_apply_ref
-        v_new, w_new = rmnp_rownorm_apply_ref(
-            g, v, w_loc, scale, weight_decay, beta=beta, eps=eps)
-    if sharded:
+    v_new, w_new = _apply_one(g, v, w_loc, scale, weight_decay, beta, eps,
+                              use_kernel)
+    if n_shards > 1:
         w_new = jax.lax.all_gather(w_new, shard_axis, axis=0, tiled=True)
+    return w_new, v_new
+
+
+def bucket_update_apply_sharded(bucket: Bucket, g_shard: jax.Array,
+                                v: jax.Array, w_chunks: jax.Array, *,
+                                scale, weight_decay: float, beta: float,
+                                eps: float, use_kernel: bool = False,
+                                shard_axis: str):
+    """ZeRO-2 single-pass fused update of one stacked bucket: gradient
+    arrives *already reduced and sharded* (this rank's ``(padded L / N,
+    d_in, d_out)`` mean-gradient shard from
+    :func:`repro.distributed.compression.exact_reduce_scatter` /
+    ``compressed_reduce_scatter_leaf``), momentum ``v`` is the matching
+    shard, and ``w_chunks`` is the ``(N, padded L / N, d_in, d_out)``
+    chunked weight operand from :func:`gather_chunks`.  The kernel runs
+    shard-in/shard-out and only the updated weight slices are all-gathered
+    — the full mean-gradient bucket never exists on any rank.
+
+    Returns ``(w_new full padded bucket, v_new shard)``."""
+    l_loc = v.shape[0]
+    n_shards = shard_count(bucket, l_loc)
+    if g_shard.shape[0] != l_loc:
+        raise ValueError(
+            f"bucket {bucket.key!r}: gradient shard has {g_shard.shape[0]} "
+            f"slices but the momentum shard has {l_loc}")
+    if w_chunks.shape[:2] != (n_shards, l_loc):
+        raise ValueError(
+            f"bucket {bucket.key!r}: weight chunks have shape "
+            f"{w_chunks.shape[:2]}, expected ({n_shards}, {l_loc}) — "
+            f"gather_chunks n_chunks must equal the shard count")
+    idx = jax.lax.axis_index(shard_axis)
+    w_loc = jax.lax.dynamic_index_in_dim(w_chunks, idx, axis=0,
+                                         keepdims=False)
+    v_new, w_new = _apply_one(g_shard, v, w_loc, scale, weight_decay, beta,
+                              eps, use_kernel)
+    w_new = jax.lax.all_gather(w_new, shard_axis, axis=0, tiled=True)
     return w_new, v_new

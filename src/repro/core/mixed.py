@@ -80,6 +80,7 @@ def mixed_optimizer(
     momentum_dtype: str = "float32",
     fused_apply: bool = False,
     shard_axis: Optional[str] = None,
+    shard_size: int = 1,
 ) -> Optimizer:
     """Build the paper's mixed optimizer.  ``matrix_kind='adamw'`` degrades to
     plain AdamW on everything (the paper's AdamW baseline).
@@ -97,12 +98,21 @@ def mixed_optimizer(
     the preconditioner kernel (single memory pass, no fp32 ``d`` bucket) and
     AdamW leaves compute their new params in place, so the step needs no
     separate ``apply_updates`` pass.  ``shard_axis`` names the mesh axis the
-    stacked matrix momentum may be ZeRO-1-sharded over (consulted only when
+    stacked matrix momentum may be ZeRO-sharded over (consulted only when
     a bucket arrives as an ``L/N`` shard inside ``shard_map``); setting it
     implies ``fused_apply``, since sharded state only works through
-    ``update_apply``."""
+    ``update_apply``.  ``shard_size`` (the size of ``shard_axis``) pads
+    bucket ``L`` to a multiple so uneven buckets shard too, and unlocks
+    ``Optimizer.update_apply_sharded`` — the ZeRO-2 entry point taking
+    reduce-scattered per-bucket mean-gradient shards (AdamW leaves still
+    read their mean grads from the per-leaf tree)."""
     if matrix_kind not in ("rmnp", "muon", "adamw"):
         raise ValueError(f"unknown matrix optimizer {matrix_kind!r}")
+    if shard_size < 1:
+        raise ValueError(f"shard_size must be >= 1, got {shard_size}")
+    if shard_size > 1 and shard_axis is None:
+        raise ValueError("shard_size > 1 needs shard_axis (the mesh axis "
+                         "the padded buckets shard over)")
     if shard_axis is not None:
         fused_apply = True  # sharded state needs the single-pass path
     if fused_apply:
@@ -121,7 +131,8 @@ def mixed_optimizer(
             lr_matrix, lr_adamw, is_mat=_is_mat, beta=beta,
             weight_decay=weight_decay, b1=b1, b2=b2, adam_eps=adam_eps,
             rn_eps=rn_eps, use_kernel=use_kernel, momentum_dtype=momentum_dtype,
-            fused_apply=fused_apply, shard_axis=shard_axis)
+            fused_apply=fused_apply, shard_axis=shard_axis,
+            shard_size=shard_size)
 
     def init(params):
         momentum = jax.tree_util.tree_map(
@@ -187,7 +198,8 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
                  beta: float, weight_decay: float, b1: float, b2: float,
                  adam_eps: float, rn_eps: float, use_kernel: bool,
                  momentum_dtype: str, fused_apply: bool = False,
-                 shard_axis: Optional[str] = None) -> Optimizer:
+                 shard_axis: Optional[str] = None,
+                 shard_size: int = 1) -> Optimizer:
     """Mixed optimizer with the matrix partition running through the
     shape-bucketed fused RMNP engine; AdamW leaves stay per-leaf (they are
     cheap elementwise updates XLA fuses on its own)."""
@@ -195,13 +207,13 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
     if mdtype not in (jnp.float32, jnp.bfloat16):
         raise ValueError(f"momentum_dtype must be float32 or bfloat16, "
                          f"got {momentum_dtype!r}")
-    plans: Dict[tuple, bucketing.BucketPlan] = {}
+    plans = bucketing.PlanCache()
 
     def _plan(params) -> bucketing.BucketPlan:
-        sig = bucketing.plan_signature(params)
-        if sig not in plans:
-            plans[sig] = bucketing.build_plan(params, predicate=is_mat)
-        return plans[sig]
+        return plans.get(
+            bucketing.plan_signature(params),
+            lambda: bucketing.build_plan(params, predicate=is_mat,
+                                         pad_multiple=shard_size))
 
     def init(params):
         plan = _plan(params)
@@ -291,5 +303,46 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
         return new_params, FusedMixedState(momentum=momentum, nu=nu,
                                            buckets=v_b)
 
+    def update_apply_sharded(g_shards, grads, state, params, step):
+        """ZeRO-2 single-pass apply (call inside ``shard_map``): matrix
+        buckets consume this rank's reduce-scattered ``(padded L / N, d_in,
+        d_out)`` fp32 mean-gradient shards from ``g_shards`` (their leaves
+        in ``grads`` are ignored); AdamW leaves read their mean grads from
+        ``grads`` as usual and update in place.  Only the updated weight
+        slices are all-gathered — no full gradient bucket per rank."""
+        plan = _plan(params)
+        eta_m = lr_matrix(step)
+        new_params, momentum, nu = adam_sweep(
+            grads, state, params, step,
+            emit=lambda u, p: p if u is None else p + u.astype(p.dtype))
+
+        n_dev = None
+        for bkt in plan.buckets:
+            n_b = bucketing.shard_count(bkt, state.buckets[bkt.key].shape[0])
+            if n_dev is None:
+                n_dev = n_b
+            elif n_b != n_dev:
+                raise ValueError(
+                    f"inconsistent shard counts across buckets: "
+                    f"{n_dev} vs {n_b} (bucket {bkt.key!r})")
+        if n_dev is None:
+            return new_params, FusedMixedState(momentum=momentum, nu=nu,
+                                               buckets={})
+        w_chunks = bucketing.gather_chunks(plan, params, n_dev)
+        w_b, v_b = {}, {}
+        for bkt in plan.buckets:
+            scale = eta_m * rms_lr_scale((bkt.d_in, bkt.d_out))
+            w_b[bkt.key], v_b[bkt.key] = bucketing.bucket_update_apply_sharded(
+                bkt, g_shards[bkt.key], state.buckets[bkt.key],
+                w_chunks[bkt.key], scale=scale, weight_decay=weight_decay,
+                beta=beta, eps=rn_eps, use_kernel=use_kernel,
+                shard_axis=shard_axis)
+        new_params = bucketing.scatter(plan, w_b, new_params, cast=True)
+        return new_params, FusedMixedState(momentum=momentum, nu=nu,
+                                           buckets=v_b)
+
+    zero2 = fused_apply and shard_axis is not None
     return Optimizer(init=init, update=update,
-                     update_apply=update_apply if fused_apply else None)
+                     update_apply=update_apply if fused_apply else None,
+                     update_apply_sharded=update_apply_sharded if zero2 else None,
+                     bucket_plan=_plan)

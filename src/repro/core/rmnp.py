@@ -49,7 +49,7 @@ class RmnpFusedState(NamedTuple):
 def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
          eps: float = 1e-8, use_kernel: bool = False, fused: bool = False,
          momentum_dtype: str = "float32", fused_apply: bool = False,
-         shard_axis: Optional[str] = None) -> Optimizer:
+         shard_axis: Optional[str] = None, shard_size: int = 1) -> Optimizer:
     """RMNP for matrix parameters.
 
     ``use_kernel`` selects the Pallas path; ``fused=True`` additionally
@@ -63,11 +63,23 @@ def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
     per-bucket kernel, so the step is a single memory pass over (g, v, w)
     with no fp32 ``d`` bucket and no separate ``apply_updates`` pass.
     ``shard_axis`` names the mesh axis the stacked momentum may be
-    ZeRO-1-sharded over (only consulted inside ``shard_map`` when a bucket
+    ZeRO-sharded over (only consulted inside ``shard_map`` when a bucket
     arrives as an ``L/N`` shard; full buckets take the replicated path).
     Setting it implies ``fused_apply`` — sharded state only works through
     ``update_apply``, so silently ignoring it would replicate the state.
+
+    ``shard_size`` (the size of ``shard_axis``) pads every bucket's stacked
+    ``L`` up to a multiple, so buckets whose ``L`` is uneven — including
+    ``L < N`` — shard instead of replicating (pad slices are zero-filled,
+    mathematically inert, and dropped on scatter).  It also unlocks
+    ``Optimizer.update_apply_sharded``, the ZeRO-2 entry point consuming
+    reduce-scattered per-bucket gradient shards directly.
     """
+    if shard_size < 1:
+        raise ValueError(f"shard_size must be >= 1, got {shard_size}")
+    if shard_size > 1 and shard_axis is None:
+        raise ValueError("shard_size > 1 needs shard_axis (the mesh axis "
+                         "the padded buckets shard over)")
     if shard_axis is not None:
         fused_apply = True  # sharded state needs the single-pass path
     if fused_apply:
@@ -75,7 +87,8 @@ def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
     if fused:
         return _rmnp_fused(lr, beta=beta, weight_decay=weight_decay, eps=eps,
                            use_kernel=use_kernel, momentum_dtype=momentum_dtype,
-                           fused_apply=fused_apply, shard_axis=shard_axis)
+                           fused_apply=fused_apply, shard_axis=shard_axis,
+                           shard_size=shard_size)
 
     def init(params):
         return RmnpState(momentum=jax.tree_util.tree_map(
@@ -108,21 +121,23 @@ def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
 def _rmnp_fused(lr: Schedule, *, beta: float, weight_decay: float, eps: float,
                 use_kernel: bool, momentum_dtype: str,
                 fused_apply: bool = False,
-                shard_axis: Optional[str] = None) -> Optimizer:
+                shard_axis: Optional[str] = None,
+                shard_size: int = 1) -> Optimizer:
     mdtype = jnp.dtype(momentum_dtype)
     if mdtype not in (jnp.float32, jnp.bfloat16):
         raise ValueError(f"momentum_dtype must be float32 or bfloat16, "
                          f"got {momentum_dtype!r}")
     # leaf->bucket plan: static metadata, computed once at init and reused by
     # every update trace (keyed on the leaf paths/shapes so one optimizer can
-    # serve several models)
-    plans: Dict[tuple, bucketing.BucketPlan] = {}
+    # serve several models; bounded LRU so a long-lived process cycling many
+    # signatures does not leak plan metadata)
+    plans = bucketing.PlanCache()
 
     def _plan(params) -> bucketing.BucketPlan:
-        sig = bucketing.plan_signature(params)
-        if sig not in plans:
-            plans[sig] = bucketing.build_plan(params, strict=True)
-        return plans[sig]
+        return plans.get(
+            bucketing.plan_signature(params),
+            lambda: bucketing.build_plan(params, strict=True,
+                                         pad_multiple=shard_size))
 
     def init(params):
         return RmnpFusedState(buckets=bucketing.init_buckets(_plan(params), mdtype))
@@ -160,5 +175,42 @@ def _rmnp_fused(lr: Schedule, *, beta: float, weight_decay: float, eps: float,
         new_params = bucketing.scatter(plan, w_b, params, cast=True)
         return new_params, RmnpFusedState(buckets=v_b)
 
+    def update_apply_sharded(g_shards, grads, state, params, step):
+        """ZeRO-2 single-pass apply (call inside ``shard_map``):
+        ``g_shards`` maps bucket key -> this rank's reduce-scattered
+        ``(padded L / N, d_in, d_out)`` fp32 mean-gradient shard; ``grads``
+        is unused (pure-matrix optimizer).  The kernel runs shard-in/
+        shard-out and only the updated weight slices are all-gathered —
+        no full gradient bucket, no full ``d`` bucket."""
+        del grads
+        plan = _plan(params)
+        eta = lr(step)
+        n_dev = None
+        for b in plan.buckets:
+            n_b = bucketing.shard_count(b, state.buckets[b.key].shape[0])
+            if n_dev is None:
+                n_dev = n_b
+            elif n_b != n_dev:
+                raise ValueError(
+                    f"inconsistent shard counts across buckets: "
+                    f"{n_dev} vs {n_b} (bucket {b.key!r})")
+        if n_dev is None:
+            return params, state
+        w_chunks = bucketing.gather_chunks(plan, params, n_dev)
+        w_b, v_b = {}, {}
+        for b in plan.buckets:
+            scale = eta * rms_lr_scale((b.d_in, b.d_out))
+            w_b[b.key], v_b[b.key] = bucketing.bucket_update_apply_sharded(
+                b, g_shards[b.key], state.buckets[b.key], w_chunks[b.key],
+                scale=scale, weight_decay=weight_decay, beta=beta, eps=eps,
+                use_kernel=use_kernel, shard_axis=shard_axis)
+        new_params = bucketing.scatter(plan, w_b, params, cast=True)
+        return new_params, RmnpFusedState(buckets=v_b)
+
+    # ZeRO-2 needs a shard axis; shard_size=1 (degenerate 1-way axis) still
+    # works — chunking and the collectives are identities there.
+    zero2 = fused_apply and shard_axis is not None
     return Optimizer(init=init, update=update,
-                     update_apply=update_apply if fused_apply else None)
+                     update_apply=update_apply if fused_apply else None,
+                     update_apply_sharded=update_apply_sharded if zero2 else None,
+                     bucket_plan=_plan)

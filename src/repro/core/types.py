@@ -29,6 +29,17 @@ class Optimizer:
     # no updates tree (and no apply_updates pass) ever exists.  Train steps
     # use it when present; None means two-pass update + apply_updates.
     update_apply: Optional[Callable[..., Any]] = None
+    # ZeRO-2 fused apply: (g_shards, grads, state, params, step) ->
+    # (new_params, state).  ``g_shards`` maps bucket key -> this rank's
+    # (padded L / N, d_in, d_out) fp32 *mean-gradient shard* (from a
+    # reduce-scatter inside shard_map); matrix leaves of ``grads`` are
+    # ignored, non-matrix leaves must already be mean-reduced.  Exposed by
+    # the fused-apply optimizers when built with shard_axis + shard_size.
+    update_apply_sharded: Optional[Callable[..., Any]] = None
+    # params -> repro.core.bucketing.BucketPlan of the matrix partition
+    # (same cached plan the update fns use).  The ZeRO-2 dp step needs it
+    # to chunk the gradient buckets before the reduce-scatter.
+    bucket_plan: Optional[Callable[[PyTree], Any]] = None
 
 
 class MixedState(NamedTuple):
@@ -42,32 +53,26 @@ def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
         params, updates, is_leaf=lambda x: x is None)
 
 
+def path_str(keypath) -> str:
+    """'/'-joined string form of a jax KeyPath (dict keys, sequence indices,
+    NamedTuple fields)."""
+    keys = []
+    for p in keypath:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+        else:
+            keys.append(str(p))
+    return "/".join(keys)
+
+
 def tree_paths(tree: PyTree):
     """[(path_string, leaf)] with '/'-joined dict keys."""
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = []
-    for path, leaf in flat:
-        keys = []
-        for p in path:
-            if hasattr(p, "key"):
-                keys.append(str(p.key))
-            elif hasattr(p, "idx"):
-                keys.append(str(p.idx))
-            else:
-                keys.append(str(p))
-        out.append(("/".join(keys), leaf))
-    return out
+    return [(path_str(path), leaf) for path, leaf in flat]
 
 
 def map_with_path(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
-    def _fn(path, leaf):
-        keys = []
-        for p in path:
-            if hasattr(p, "key"):
-                keys.append(str(p.key))
-            elif hasattr(p, "idx"):
-                keys.append(str(p.idx))
-            else:
-                keys.append(str(p))
-        return fn("/".join(keys), leaf)
-    return jax.tree_util.tree_map_with_path(_fn, tree)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(path_str(path), leaf), tree)

@@ -15,9 +15,21 @@ Two mechanisms, composable with the mixed optimizer:
        d) all_gather the summed chunk in bf16               [2n bytes]
 
    ~2.7x fewer wire bytes than fp32 ring all-reduce, ~1.4x fewer than
-   bf16.  The quantization residual is fed back the next step (error
-   feedback, Seide et al. lineage), so the *accumulated* update is
-   unbiased and convergence is preserved (tests/test_compression.py).
+   bf16.  *Both* lossy stages feed back into the next step's error
+   accumulator (error feedback, Seide et al. lineage): the local int8
+   quantization residual of (a), and — because this rank is the one that
+   computed chunk ``r``'s fp32 sum before broadcasting it in bf16 — the
+   bf16 rounding residual of (d) for this rank's own chunk.  The
+   *accumulated* update is therefore unbiased and convergence is
+   preserved (tests/test_compression.py, including a long-run
+   no-drift regression against ``exact_mean``).
+
+3. ZeRO-2 reduce-scatter (``exact_reduce_scatter`` /
+   ``compressed_reduce_scatter_leaf``): the stacked-bucket gradient is
+   reduced *into its shard* — stage (d) disappears entirely (the result
+   stays sharded; rank ``r`` keeps chunk ``r`` in fp32), so the wire
+   schedule is the int8 a2a alone and the full mean-gradient bucket
+   never exists on any rank.
 
    Rounding is deterministic (ties-to-even): with error feedback,
    stochastic rounding adds nothing and would break bitwise restart
@@ -25,12 +37,12 @@ Two mechanisms, composable with the mixed optimizer:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import PyTree
+from repro.core.types import PyTree, path_str
 
 _BLOCK = 512  # quantization block (elements) — one fp32 scale per block
 
@@ -80,7 +92,7 @@ def compressed_mean_leaf(g: jax.Array, err: jax.Array, axis_name: str,
     flat = _pad_to(v.reshape(-1), n_dev * _BLOCK)
     q, scale = quantize_blockwise(flat)
     deq = dequantize_blockwise(q, scale)
-    new_err = (flat - deq)[:n].reshape(g.shape)
+    err_flat = flat - deq  # stage-(a) residual: local int8 quantization
 
     # b) exchange chunks: row j of the result is sender-j's chunk for us
     qs = q.reshape(n_dev, -1)
@@ -94,28 +106,109 @@ def compressed_mean_leaf(g: jax.Array, err: jax.Array, axis_name: str,
     chunk_sum = jnp.sum(
         jax.vmap(dequantize_blockwise)(q_recv, s_recv), axis=0)
 
-    # d) share the result in bf16
-    gathered = jax.lax.all_gather(chunk_sum.astype(jnp.bfloat16), axis_name,
+    # d) share the result in bf16.  The bf16 rounding of chunk_sum is the
+    # second lossy stage, and this rank is the only one that knows the fp32
+    # value it rounded — so the rounding residual is folded into this rank's
+    # error accumulator at its own chunk's positions.  Next step the chunk
+    # sum carries it (+rho, exactly once), keeping the accumulated mean
+    # unbiased; without it the bias compounds one bf16 ulp per step.
+    chunk_bf16 = chunk_sum.astype(jnp.bfloat16)
+    rounding = chunk_sum - chunk_bf16.astype(jnp.float32)
+    clen = flat.size // n_dev
+    idx = jax.lax.axis_index(axis_name)
+    own = jax.lax.dynamic_slice(err_flat, (idx * clen,), (clen,))
+    err_flat = jax.lax.dynamic_update_slice(err_flat, own + rounding,
+                                            (idx * clen,))
+    new_err = err_flat[:n].reshape(g.shape)
+
+    gathered = jax.lax.all_gather(chunk_bf16, axis_name,
                                   tiled=True).astype(jnp.float32)
     mean = gathered[:n].reshape(g.shape) / n_dev
     return mean, new_err
 
 
 def compressed_mean(grads: PyTree, state: CompressionState, axis_name: str,
-                    n_dev: int):
+                    n_dev: int, skip: Optional[Callable[[str], bool]] = None):
     """Tree-wide compressed mean; call inside shard_map over ``axis_name``.
-    ``n_dev`` is the (static) size of the mesh axis."""
+    ``n_dev`` is the (static) size of the mesh axis.  Leaves whose path
+    matches ``skip`` pass through unreduced with their error untouched —
+    the ZeRO-2 step uses this to carve out the matrix leaves it
+    reduce-scatters bucket-wise instead."""
 
-    def leaf(g, e):
+    def leaf(kp, g, e):
+        if skip is not None and skip(path_str(kp)):
+            return g, e
         return compressed_mean_leaf(g, e, axis_name, n_dev)
 
-    out = jax.tree_util.tree_map(leaf, grads, state.error)
+    out = jax.tree_util.tree_map_with_path(leaf, grads, state.error)
     pick = lambda i: jax.tree_util.tree_map(
         lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
     return pick(0), CompressionState(error=pick(1))
 
 
 # reference (uncompressed) mean, for the tests' convergence comparison
-def exact_mean(grads: PyTree, axis_name: str):
-    return jax.tree_util.tree_map(
-        lambda g: jax.lax.pmean(g.astype(jnp.float32), axis_name), grads)
+def exact_mean(grads: PyTree, axis_name: str,
+               skip: Optional[Callable[[str], bool]] = None):
+    def leaf(kp, g):
+        if skip is not None and skip(path_str(kp)):
+            return g
+        return jax.lax.pmean(g.astype(jnp.float32), axis_name)
+
+    return jax.tree_util.tree_map_with_path(leaf, grads)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-2: reduce-scatter straight into the bucket shard (call inside
+# shard_map).  Operands are the (n_dev, chunk, d_in, d_out) chunked bucket
+# layout of repro.core.bucketing.gather_chunks — chunk j is rank j's shard.
+# ---------------------------------------------------------------------------
+
+def exact_reduce_scatter(chunks: jax.Array, axis_name: str) -> jax.Array:
+    """fp32 mean of a chunked bucket operand, left scattered: rank ``r``
+    returns chunk ``r`` of the cross-replica mean, shape ``chunks.shape[1:]``.
+    The full mean bucket never exists on any rank."""
+    n_dev = chunks.shape[0]
+    summed = jax.lax.psum_scatter(chunks.astype(jnp.float32), axis_name,
+                                  scatter_dimension=0, tiled=False)
+    return summed / n_dev
+
+
+def compressed_reduce_scatter_leaf(v_chunks: jax.Array, axis_name: str,
+                                   n_dev: int):
+    """int8 error-feedback reduce-scatter of one chunked bucket operand.
+
+    ``v_chunks``: ``(n_dev, chunk, d_in, d_out)`` fp32 — this rank's local
+    addend with the error accumulator already folded in (``g + err``),
+    pre-split into per-destination chunks.  The schedule is stages (a)-(c)
+    of :func:`compressed_mean_leaf` only: quantize, a2a the int8 chunks +
+    fp32 block scales, dequantize + fp32 local sum.  Stage (d) — the bf16
+    all-gather and its rounding bias — disappears because the result *stays
+    sharded*: rank ``r`` keeps its fp32 chunk sum.
+
+    Returns ``(mean_shard fp32 (chunk, d_in, d_out), resid like v_chunks)``
+    where ``resid`` is the rank-local quantization residual to scatter back
+    into the error state (error feedback)."""
+    if v_chunks.shape[0] != n_dev:
+        raise ValueError(
+            f"chunked operand has leading dim {v_chunks.shape[0]}, expected "
+            f"the axis size {n_dev} — gather_chunks(n_chunks=n_dev)?")
+    cshape = v_chunks.shape[1:]
+    n = 1
+    for s in cshape:
+        n *= s
+    flat = v_chunks.astype(jnp.float32).reshape(n_dev, -1)
+    pad = (-n) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    q, scale = jax.vmap(quantize_blockwise)(flat)
+    deq = jax.vmap(dequantize_blockwise)(q, scale)
+    resid = (flat - deq)[:, :n].reshape(v_chunks.shape)
+
+    q_recv = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)
+    s_recv = jax.lax.all_to_all(scale, axis_name, split_axis=0,
+                                concat_axis=0, tiled=False)
+    chunk_sum = jnp.sum(jax.vmap(dequantize_blockwise)(q_recv, s_recv),
+                        axis=0)
+    mean_shard = chunk_sum[:n].reshape(cshape) / n_dev
+    return mean_shard, resid

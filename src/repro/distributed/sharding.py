@@ -37,8 +37,10 @@ DEFAULT_RULES = {
     "lora": None,
     "state": None,
     # leading L axis of a stacked (L, d_in, d_out) optimizer-state bucket
-    # (core/bucketing.py): ZeRO-1 shard over the data axis.  Uneven L falls
-    # back to replication automatically (_resolve_axis divisibility check).
+    # (core/bucketing.py): ZeRO shard over the data axis.  Plans built with
+    # pad_multiple=axis size (optimizer shard_size) pad L so *every* bucket
+    # divides and shards; unpadded uneven L falls back to replication
+    # automatically (_resolve_axis divisibility check).
     "bucket": "data",
 }
 
@@ -122,10 +124,12 @@ def bucket_specs(opt_state, mesh: Mesh, rules: Optional[dict] = None):
     """Per-leaf PartitionSpec tree for an optimizer state whose matrix
     momentum lives in stacked ``(L, d_in, d_out)`` bucket buffers
     (core/bucketing.py): bucket leaves shard their leading ``L`` axis via
-    the ``"bucket"`` logical rule (ZeRO-1 optimizer-state partitioning —
-    per-rank stacked-momentum bytes drop by the axis size), falling back to
-    replication per bucket when ``L`` is not divisible by the mesh axis;
-    everything else is replicated.  Feed the result to ``shard_map``
+    the ``"bucket"`` logical rule (ZeRO optimizer-state partitioning —
+    per-rank stacked-momentum bytes drop by the axis size).  Buffers from a
+    plan padded to the axis size (optimizer ``shard_size=N``) always divide
+    and therefore always shard, uneven buckets included; unpadded buffers
+    whose ``L`` is not divisible fall back to replication per bucket.
+    Everything else is replicated.  Feed the result to ``shard_map``
     in/out_specs (train/dp_step.py) or ``jax.device_put``."""
     from repro.core.types import map_with_path
 

@@ -100,18 +100,27 @@ def count_pallas_calls(fn, *args, **kwargs) -> int:
                       lambda eqn: int(eqn.primitive.name == "pallas_call"))
 
 
-def count_buffer_eqns(fn, shape, dtype, *args, **kwargs) -> int:
+def count_buffer_eqns(fn, shape, dtype, *args, exclude_prims=(),
+                      **kwargs) -> int:
     """Number of jaxpr equations in ``fn`` (recursive) producing an output of
     exactly ``(shape, dtype)`` — the tracer behind the single-pass engine's
     'no full-partition fp32 intermediate' claim: per bucket, the two-pass
     update materializes the fp32 preconditioned ``d`` buffer *and* the scaled
     update at the full bucket shape, while fused-apply emits only the updated
-    weights.  Traces but never runs ``fn``."""
+    weights.  Traces but never runs ``fn``.
+
+    ``exclude_prims`` names primitives whose outputs are not counted — the
+    ZeRO-2 tests use it to discount the *intended* full-bucket buffer (the
+    updated-weights ``all_gather``) when params are fp32, so the count
+    isolates gradient-path intermediates."""
     shape = tuple(shape)
     dtype = jnp.dtype(dtype)
+    exclude = frozenset(exclude_prims)
     closed = jax.make_jaxpr(fn)(*args, **kwargs)
 
     def visit(eqn):
+        if eqn.primitive.name in exclude:
+            return 0
         return sum(1 for v in eqn.outvars
                    if getattr(v.aval, "shape", None) == shape
                    and getattr(v.aval, "dtype", None) == dtype)

@@ -35,6 +35,7 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
           dominance_every: int = 0, matrix_embed: bool = True,
           use_kernel: bool = False, fused: bool = False,
           momentum_dtype: str = "float32", fused_apply: bool = False,
+          zero2: bool = False, compress: bool = True,
           log_file: str = "", stop_at: int = 0):
     """``stop_at`` simulates a crash: train to that step (schedules still
     span ``steps``) and exit WITHOUT the final checkpoint.
@@ -43,11 +44,18 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
     (one preconditioner pass per distinct matrix shape instead of one per
     leaf); ``momentum_dtype='bfloat16'`` halves its momentum storage;
     ``fused_apply`` folds the weight update into the per-bucket kernel
-    (single memory pass, no separate apply_updates sweep)."""
+    (single memory pass, no separate apply_updates sweep); ``zero2``
+    (implies ``fused_apply``) switches to the explicit data-parallel step
+    with the matrix momentum *and* gradient buckets sharded over the data
+    axis — reduce-scatter straight into the bucket shard, padded uneven
+    buckets included (``compress`` picks the int8 error-feedback schedule
+    over the exact fp32 collectives)."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
 
+    mesh = make_local_mesh(data=len(jax.devices()))
+    n_dev = mesh.shape["data"]
     opt = mixed_optimizer(
         optimizer,
         cosine_with_warmup(lr_matrix, steps),
@@ -56,16 +64,27 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
         use_kernel=use_kernel,
         fused=fused,
         momentum_dtype=momentum_dtype,
-        fused_apply=fused_apply,
+        fused_apply=fused_apply or zero2,
+        shard_axis="data" if zero2 else None,
+        shard_size=n_dev if zero2 else 1,
     )
-    step_fn = make_train_step(cfg, opt, remat="none" if reduced else "full")
-    mesh = make_local_mesh(data=len(jax.devices()))
 
     params = init_params(cfg, jax.random.PRNGKey(seed))
     opt_state = opt.init(params)
     start_step, data_step = 0, 0
 
-    if log_every and (fused or fused_apply or use_kernel):
+    if zero2:
+        from repro.train.dp_step import init_dp_state, make_dp_train_step
+        step_fn = make_dp_train_step(
+            cfg, opt, mesh, shard_state=True, zero2=True, compress=compress,
+            opt_state=opt_state, remat="none" if reduced else "full")
+        comp_state = init_dp_state(params)
+    else:
+        step_fn = make_train_step(cfg, opt,
+                                  remat="none" if reduced else "full")
+        comp_state = None
+
+    if log_every and (fused or fused_apply or zero2 or use_kernel):
         from repro.train.step import optimizer_launches
         n = optimizer_launches(opt, params)
         detail = (f" ({len(opt_state.buckets)} shape buckets)"
@@ -74,9 +93,17 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     if mgr is not None:
-        restored = mgr.restore_latest((params, opt_state))
+        # zero2 checkpoints include the compression error-feedback state:
+        # dropping the accumulated residual on restart would break the
+        # schedule's unbiased-accumulation guarantee at every resume
+        template = ((params, opt_state, comp_state) if zero2
+                    else (params, opt_state))
+        restored = mgr.restore_latest(template)
         if restored is not None:
-            (params, opt_state), start_step, data_step = restored
+            if zero2:
+                (params, opt_state, comp_state), start_step, data_step = restored
+            else:
+                (params, opt_state), start_step, data_step = restored
             print(f"[train] resumed from step {start_step}")
 
     stream = make_stream(cfg, seq, batch, seed=seed, start_step=data_step)
@@ -89,8 +116,12 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
         for step in range(start_step, end_step):
             np_batch = next(stream)
             jbatch = {k: jnp.asarray(v) for k, v in np_batch.items()}
-            params, opt_state, metrics = jit_step(
-                params, opt_state, jbatch, jnp.int32(step))
+            if zero2:
+                params, opt_state, comp_state, metrics = jit_step(
+                    params, opt_state, comp_state, jbatch, jnp.int32(step))
+            else:
+                params, opt_state, metrics = jit_step(
+                    params, opt_state, jbatch, jnp.int32(step))
             if log_every and (step % log_every == 0 or step == steps - 1):
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = step
@@ -107,9 +138,13 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
                       + (f" r_avg={m['r_avg']:.2f}" if "r_avg" in m else ""),
                       flush=True)
             if mgr is not None and ckpt_every and (step + 1) % ckpt_every == 0:
-                mgr.save(step + 1, (params, opt_state), data_step=stream.step)
+                state = ((params, opt_state, comp_state) if zero2
+                         else (params, opt_state))
+                mgr.save(step + 1, state, data_step=stream.step)
     if mgr is not None and end_step == steps:
-        mgr.save(steps, (params, opt_state), data_step=stream.step, block=True)
+        state = ((params, opt_state, comp_state) if zero2
+                 else (params, opt_state))
+        mgr.save(steps, state, data_step=stream.step, block=True)
         mgr.wait()
     elif mgr is not None:
         mgr.wait()  # crash simulation: last periodic checkpoint survives
@@ -145,6 +180,16 @@ def main():
                     help="single-pass update: fold the weight apply into "
                          "the per-bucket RMNP kernel (implies --fused; no "
                          "fp32 d buffer, no separate apply_updates pass)")
+    ap.add_argument("--zero2", action="store_true",
+                    help="explicit data-parallel step with ZeRO-2 sharding "
+                         "(implies --fused-apply): matrix momentum AND "
+                         "gradient buckets shard over the data axis — "
+                         "gradients reduce-scatter straight into the bucket "
+                         "shard, uneven buckets padded; only updated param "
+                         "slices are all-gathered")
+    ap.add_argument("--no-compress", action="store_true",
+                    help="with --zero2: exact fp32 collectives instead of "
+                         "the int8 error-feedback schedule")
     ap.add_argument("--no-matrix-embed", action="store_true",
                     help="AdamW on LM-head/embeddings (paper App D.4 ablation)")
     ap.add_argument("--stop-at", type=int, default=0,
@@ -158,6 +203,7 @@ def main():
           matrix_embed=not args.no_matrix_embed,
           use_kernel=args.use_kernel, fused=args.fused,
           momentum_dtype=args.momentum_dtype, fused_apply=args.fused_apply,
+          zero2=args.zero2, compress=not args.no_compress,
           log_file=args.log_file, stop_at=args.stop_at)
 
 

@@ -1,5 +1,5 @@
 """Explicit data-parallel train step with compressed gradient reduction
-and optional ZeRO-1 optimizer-state sharding.
+and optional ZeRO optimizer-state / gradient sharding.
 
 The pjit train step (train/step.py) lets XLA choose the gradient
 reduction; this variant takes control of the cross-replica collective via
@@ -7,7 +7,7 @@ reduction; this variant takes control of the cross-replica collective via
 (distributed/compression.py) replaces the fp32 ring all-reduce.  Params
 are replicated across the axis.
 
-Optimizer state has two modes:
+Optimizer state has three modes:
 
 * ``shard_state=False`` (ZeRO-0): state replicated, any optimizer works.
 * ``shard_state=True`` (ZeRO-1): the stacked per-bucket matrix momentum
@@ -15,9 +15,19 @@ Optimizer state has two modes:
   holds ``L/N`` slices, runs the single-pass fused-apply kernel on its
   shard, and all-gathers only the updated param slices.  Per-rank stacked
   momentum bytes drop by the data-axis size.  Requires a fused-apply
-  optimizer built with ``shard_axis=axis_name``; buckets whose ``L`` is
-  not divisible by the axis fall back to replication individually
+  optimizer built with ``shard_axis=axis_name``; with ``shard_size=N`` the
+  buckets are padded so *every* bucket shards (uneven ``L`` included),
+  without it uneven buckets fall back to replication individually
   (distributed/sharding.py ``bucket_specs``).
+* ``zero2=True`` (implies ``shard_state``): additionally the matrix
+  *gradient* reduction is a reduce-scatter straight into each rank's
+  bucket shard — the gradient buckets are chunked per destination rank
+  (core/bucketing.py ``gather_chunks``), reduced via ``psum_scatter`` (or
+  the int8 a2a error-feedback schedule, with no bf16 all-gather stage),
+  and fed to ``Optimizer.update_apply_sharded``, so the full
+  ``(L, d_in, d_out)`` mean-gradient bucket never exists on any rank:
+  per-rank gradient-bucket bytes drop by the axis size alongside the
+  momentum, and only the updated param slices are all-gathered.
 """
 from __future__ import annotations
 
@@ -28,9 +38,11 @@ from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.core import apply_updates, clip_by_global_norm
-from repro.core.types import Optimizer, PyTree
+from repro.core.mixed import ClipStats
+from repro.core.types import Optimizer, PyTree, map_with_path, tree_paths
 from repro.distributed.compression import (
-    CompressionState, compressed_mean, exact_mean, init_compression_state,
+    CompressionState, compressed_mean, compressed_reduce_scatter_leaf,
+    exact_mean, exact_reduce_scatter, init_compression_state,
 )
 from repro.distributed.sharding import bucket_specs
 from repro.models.model import loss_fn
@@ -39,16 +51,21 @@ from repro.models.model import loss_fn
 def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                        *, axis_name: str = "data", clip_norm: float = 1.0,
                        compress: bool = True, remat: str = "none",
-                       shard_state: bool = False,
+                       shard_state: bool = False, zero2: bool = False,
                        opt_state: PyTree = None):
     """(params, opt_state, comp_state, batch, step) -> (params, opt_state,
     comp_state, metrics).  Batch is sharded along ``axis_name``; params
-    replicated; optimizer state replicated (default) or ZeRO-1-sharded
-    along the stacked-bucket ``L`` axis (``shard_state=True``, which needs
+    replicated; optimizer state replicated (default) or ZeRO-sharded along
+    the stacked-bucket ``L`` axis (``shard_state=True``, which needs
     ``opt_state`` — real or ``jax.eval_shape`` abstract — to derive the
     per-bucket specs, and an optimizer built with ``fused_apply=True,
-    shard_axis=axis_name``)."""
+    shard_axis=axis_name``).  ``zero2=True`` (implies ``shard_state``)
+    reduce-scatters the matrix gradient buckets straight into the shard;
+    it needs the optimizer built with ``shard_size=N`` as well (padded
+    buckets + ``update_apply_sharded``)."""
     n_dev = mesh.shape[axis_name]
+    if zero2:
+        shard_state = True
     state_spec = P()
     if shard_state:
         if opt.update_apply is None:
@@ -62,23 +79,93 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                 "shard_state=True needs opt_state (the real state or its "
                 "jax.eval_shape) to derive per-bucket partition specs")
         state_spec = bucket_specs(opt_state, mesh, {"bucket": axis_name})
+    if zero2 and (opt.update_apply_sharded is None or opt.bucket_plan is None):
+        raise ValueError(
+            "zero2=True requires an optimizer exposing update_apply_sharded "
+            "(rmnp/mixed_optimizer built with shard_axis=axis_name and "
+            "shard_size=the axis size): the ZeRO-2 step reduce-scatters "
+            "gradient buckets straight into the momentum shard")
+
+    def zero2_reduce(grads, comp_state):
+        """Matrix buckets: chunked reduce-scatter of the mean gradient
+        (full mean bucket never materializes); everything else: the usual
+        per-leaf mean.  Returns (g_shards, rest-mean grads, comp_state)."""
+        plan = opt.bucket_plan(grads)
+        mat = plan.paths
+        skip = lambda path: path in mat
+        g_shards = {}
+        if compress:
+            # fold the rank-local error accumulator in before chunking; the
+            # residual of the int8 quantization goes back into the per-leaf
+            # error state (pad-slice residuals are zero and are dropped)
+            from repro.core.bucketing import gather_chunks, scatter_chunks
+            v_tree = jax.tree_util.tree_map(
+                lambda g, e: g.astype(jnp.float32) + e, grads,
+                comp_state.error)
+            chunks = gather_chunks(plan, v_tree, n_dev, dtype=jnp.float32)
+            resid = {}
+            for b in plan.buckets:
+                g_shards[b.key], resid[b.key] = compressed_reduce_scatter_leaf(
+                    chunks[b.key], axis_name, n_dev)
+            grads, comp_state = compressed_mean(
+                grads, comp_state, axis_name, n_dev, skip=skip)
+            comp_state = CompressionState(
+                error=scatter_chunks(plan, resid, comp_state.error))
+        else:
+            from repro.core.bucketing import gather_chunks
+            chunks = gather_chunks(plan, grads, n_dev, dtype=jnp.float32)
+            for b in plan.buckets:
+                g_shards[b.key] = exact_reduce_scatter(chunks[b.key],
+                                                       axis_name)
+            grads = exact_mean(grads, axis_name, skip=skip)
+        return g_shards, grads, comp_state, mat
+
+    def zero2_clip(g_shards, grads, mat):
+        """Global-norm clip across the sharded matrix partition and the
+        replicated rest.  The norm is the same quantity the replicated step
+        computes (matrix contributions arrive via psum over the shards), up
+        to float summation order."""
+        sq_rest = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for path, g in tree_paths(grads) if path not in mat)
+        sq_mat = sum(jnp.sum(jnp.square(s)) for s in g_shards.values())
+        sq_mat = jax.lax.psum(sq_mat, axis_name)
+        gnorm = jnp.sqrt(sq_rest + sq_mat)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+        g_shards = {k: s * scale for k, s in g_shards.items()}
+        # matrix leaves of the per-leaf tree are stale local grads the
+        # sharded optimizer ignores — scaling them would be dead work
+        grads = map_with_path(
+            lambda path, g: g if path in mat
+            else (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+        stats = ClipStats(global_norm=gnorm,
+                          clipped=(gnorm > clip_norm).astype(jnp.float32))
+        return g_shards, grads, stats
 
     def local_step(params, opt_state, comp_state, batch, step):
         (loss, metrics), grads = jax.value_and_grad(
             lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True)(params)
-        if compress:
-            grads, comp_state = compressed_mean(
-                grads, comp_state, axis_name, n_dev)
+        if zero2:
+            g_shards, grads, comp_state, mat = zero2_reduce(grads, comp_state)
+            metrics = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(m, axis_name), metrics)
+            g_shards, grads, clip_stats = zero2_clip(g_shards, grads, mat)
+            params, opt_state = opt.update_apply_sharded(
+                g_shards, grads, opt_state, params, step)
         else:
-            grads = exact_mean(grads, axis_name)
-        metrics = jax.tree_util.tree_map(
-            lambda m: jax.lax.pmean(m, axis_name), metrics)
-        grads, clip_stats = clip_by_global_norm(grads, clip_norm)
-        if opt.update_apply is not None:
-            params, opt_state = opt.update_apply(grads, opt_state, params, step)
-        else:
-            updates, opt_state = opt.update(grads, opt_state, params, step)
-            params = apply_updates(params, updates)
+            if compress:
+                grads, comp_state = compressed_mean(
+                    grads, comp_state, axis_name, n_dev)
+            else:
+                grads = exact_mean(grads, axis_name)
+            metrics = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(m, axis_name), metrics)
+            grads, clip_stats = clip_by_global_norm(grads, clip_norm)
+            if opt.update_apply is not None:
+                params, opt_state = opt.update_apply(grads, opt_state, params,
+                                                     step)
+            else:
+                updates, opt_state = opt.update(grads, opt_state, params, step)
+                params = apply_updates(params, updates)
         metrics = dict(metrics, grad_norm=clip_stats.global_norm,
                        clip_rate=clip_stats.clipped)
         return params, opt_state, comp_state, metrics

@@ -1,16 +1,25 @@
-"""Subprocess worker for the ZeRO-1 optimizer-state sharding tests.
+"""Subprocess worker for the ZeRO optimizer-state / gradient sharding tests.
 
 Runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (set by
 the parent test — the flag must be in place before jax initializes, which
 is why this cannot run in the main pytest process).  Exercises:
 
-  * a 4-way ``data`` mesh over a synthetic bucketed tree: per-rank stacked
-    momentum holds exactly ``L/N`` slices (bytes shrink N x), an uneven-L
-    bucket falls back to replication, and the sharded single-pass step is
-    bit-identical to the replicated one;
-  * the full ``make_dp_train_step(shard_state=True)`` path on a reduced
-    GPT-2 model over a 2-way mesh: params after one update match the
-    replicated step exactly and the divisible buckets are halved per rank.
+  * a 4-way ``data`` mesh over a synthetic bucketed tree with *uneven*
+    buckets (``L % N != 0``, including ``L < N``): with the optimizer built
+    with ``shard_size=4`` every bucket pads and shards — per-rank stacked
+    momentum holds exactly ``padded L / N`` slices, pad slices stay
+    identically zero, and both the ZeRO-1 step (full gradient, sharded
+    momentum) and the ZeRO-2 step (reduce-scattered gradient shards via
+    ``update_apply_sharded``) are bit-identical to the replicated step;
+  * a traced-buffer assertion (``count_buffer_eqns``): with bf16 params
+    the ZeRO-2 step materializes *zero* full-``(padded L, d_in, d_out)``
+    fp32 buffers per rank — the mean-gradient bucket never exists — while
+    the ZeRO-1 step (which gathers the full mean-gradient bucket) does;
+  * the full ``make_dp_train_step`` path on a reduced GPT-2 model over a
+    2-way mesh, ZeRO-1 and ZeRO-2: params after one update match the
+    replicated step exactly and every bucket is halved per rank under
+    ``shard_size=2``; the compressed (int8 reduce-scatter) ZeRO-2 step
+    trains to a finite loss.
 
 Prints ``ZERO_SHARD_OK`` as the last line on success; any assertion error
 fails the subprocess (and therefore the parent test).
@@ -25,50 +34,124 @@ import numpy as np  # noqa: E402
 from jax.experimental.shard_map import shard_map  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import constant, mixed_optimizer  # noqa: E402
+from repro.core import bucketing, constant, mixed_optimizer  # noqa: E402
 from repro.core.rmnp import rmnp  # noqa: E402
 from repro.core.types import tree_paths  # noqa: E402
+from repro.distributed.compression import exact_reduce_scatter  # noqa: E402
 from repro.distributed.sharding import bucket_specs  # noqa: E402
+from repro.kernels.ops import count_buffer_eqns  # noqa: E402
+
+# synthetic tree: bucket 8x16 has L=8 (divisible by 4), bucket 8x24 has
+# L=3 (uneven AND < N), bucket 16x8 has L=6 (uneven, > N) -> padded
+# sizes 8 / 4 / 8 under shard_size=4.  Lead dims are chosen so no single
+# leaf reshape coincides with a full padded bucket shape (keeps the
+# traced-buffer count free of reshape false-positives).
+SHAPES = {**{f"l{i}/w": (2, 8, 16) for i in range(4)},
+          "odd/w": (3, 8, 24),
+          "six/w": (6, 16, 8)}
+PADDED = {"8x16": (8, 2), "8x24": (4, 1), "16x8": (8, 2)}  # (padded, per-rank)
+
+
+def make(seed, shapes=None):
+    shapes = shapes or SHAPES
+    return {k: jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(seed), i), s, jnp.float32)
+        for i, (k, s) in enumerate(sorted(shapes.items()))}
 
 
 def synthetic_four_way():
     assert len(jax.devices()) >= 4, f"need 4 CPU devices, got {jax.devices()}"
     mesh = jax.make_mesh((4,), ("data",))
-    shapes = {f"l{i}/w": (2, 8, 16) for i in range(4)}  # bucket 8x16, L=8
-    shapes["odd/w"] = (3, 8, 24)                        # L=3: uneven -> replicated
-
-    def make(seed):
-        return {k: jax.random.normal(
-            jax.random.fold_in(jax.random.PRNGKey(seed), i), s, jnp.float32)
-            for i, (k, s) in enumerate(sorted(shapes.items()))}
-
     params, grads = make(0), make(1)
-    opt_sh = rmnp(constant(0.1), beta=0.9, fused_apply=True, shard_axis="data")
+    opt_sh = rmnp(constant(0.1), beta=0.9, shard_axis="data", shard_size=4)
     opt_rep = rmnp(constant(0.1), beta=0.9, fused_apply=True)
+    sizes = {b.key: b.size for b in opt_rep.bucket_plan(params).buckets}
+
     state = opt_sh.init(params)
     sspec = bucket_specs(state, mesh)
-    step_sh = jax.jit(shard_map(
-        lambda g, s, p: opt_sh.update_apply(g, s, p, 0), mesh=mesh,
-        in_specs=(P(), sspec, P()), out_specs=(P(), sspec), check_rep=False))
-    p_sh, s_sh = step_sh(grads, state, params)
+    # shard_size=4 pads every bucket, so every bucket must get a real spec
+    assert all(s[0] == "data" for s in sspec.buckets.values()), sspec.buckets
     p_rep, s_rep = jax.jit(opt_rep.update_apply)(
         grads, opt_rep.init(params), params, 0)
 
-    for k in p_sh:
-        np.testing.assert_array_equal(np.asarray(p_sh[k]), np.asarray(p_rep[k]),
-                                      err_msg=f"sharded != replicated: {k}")
-    # divisible bucket: each rank holds L/N = 8/4 = 2 slices -> bytes / 4
-    shard = s_sh.buckets["8x16"].addressable_shards[0].data
-    assert shard.shape == (2, 8, 16), shard.shape
-    assert shard.nbytes * 4 == s_sh.buckets["8x16"].nbytes
-    # uneven bucket: replicated fallback, full L on every rank
-    odd = s_sh.buckets["8x24"].addressable_shards[0].data
-    assert odd.shape == (3, 8, 24), odd.shape
-    for k in s_sh.buckets:
-        np.testing.assert_array_equal(np.asarray(s_sh.buckets[k]),
-                                      np.asarray(s_rep.buckets[k]),
-                                      err_msg=f"momentum mismatch: {k}")
-    print("synthetic 4-way: OK")
+    def check(tag, p_sh, s_sh):
+        for k in p_sh:
+            np.testing.assert_array_equal(
+                np.asarray(p_sh[k]), np.asarray(p_rep[k]),
+                err_msg=f"{tag}: sharded != replicated: {k}")
+        for k, (padded, per_rank) in PADDED.items():
+            shard = s_sh.buckets[k].addressable_shards[0].data
+            assert shard.shape[0] == per_rank, (tag, k, shard.shape)
+            assert s_sh.buckets[k].shape[0] == padded, (tag, k)
+            assert shard.nbytes * 4 == s_sh.buckets[k].nbytes
+            full = np.asarray(s_sh.buckets[k])
+            np.testing.assert_array_equal(
+                full[:sizes[k]], np.asarray(s_rep.buckets[k]),
+                err_msg=f"{tag}: momentum mismatch: {k}")
+            # the pad-slice invariant: zero grad -> zero momentum
+            assert np.all(full[sizes[k]:] == 0), (tag, k)
+
+    # ZeRO-1: full gradient operand, sharded (padded) momentum
+    step_z1 = jax.jit(shard_map(
+        lambda g, s, p: opt_sh.update_apply(g, s, p, 0), mesh=mesh,
+        in_specs=(P(), sspec, P()), out_specs=(P(), sspec), check_rep=False))
+    check("zero1", *step_z1(grads, state, params))
+
+    # ZeRO-2: reduce-scatter the gradient buckets into the shard
+    def z2(g, s, p):
+        plan = opt_sh.bucket_plan(p)
+        chunks = bucketing.gather_chunks(plan, g, 4, dtype=jnp.float32)
+        shards = {b.key: exact_reduce_scatter(chunks[b.key], "data")
+                  for b in plan.buckets}
+        return opt_sh.update_apply_sharded(shards, g, s, p, 0)
+
+    step_z2 = jax.jit(shard_map(
+        z2, mesh=mesh, in_specs=(P(), sspec, P()), out_specs=(P(), sspec),
+        check_rep=False))
+    check("zero2", *step_z2(grads, state, params))
+    print("synthetic 4-way: OK (zero1 + zero2 bitwise, uneven buckets "
+          "padded+sharded)")
+
+
+def synthetic_traced_buffers():
+    """With bf16 params, any full-(padded L, d_in, d_out) fp32 equation is a
+    gradient-path intermediate.  ZeRO-2 must have none — the mean-gradient
+    bucket never exists per rank — while ZeRO-1 gathers it (>= 1)."""
+    mesh = jax.make_mesh((4,), ("data",))
+    opt_sh = rmnp(constant(0.1), beta=0.9, shard_axis="data", shard_size=4)
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.bfloat16), make(0))
+    grads = make(1)
+    state = jax.eval_shape(opt_sh.init, params)
+    sspec = bucket_specs(state, mesh)
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), (grads, params))
+
+    def z1(g, s, p):
+        return opt_sh.update_apply(g, s, p, 0)
+
+    def z2(g, s, p):
+        plan = opt_sh.bucket_plan(p)
+        chunks = bucketing.gather_chunks(plan, g, 4, dtype=jnp.float32)
+        shards = {b.key: exact_reduce_scatter(chunks[b.key], "data")
+                  for b in plan.buckets}
+        return opt_sh.update_apply_sharded(shards, g, s, p, 0)
+
+    plan = opt_sh.bucket_plan(params)
+    for fn, name, expect_zero in ((z1, "zero1", False), (z2, "zero2", True)):
+        step = shard_map(fn, mesh=mesh, in_specs=(P(), sspec, P()),
+                         out_specs=(P(), sspec), check_rep=False)
+        for b in plan.buckets:
+            # the shard_map eqn's own outvars are *global-view* avals of the
+            # (physically sharded) outputs, not per-rank buffers — the walk
+            # recurses into its inner jaxpr where the real allocations live
+            n = count_buffer_eqns(step, (b.padded, b.d_in, b.d_out),
+                                  jnp.float32, abstract[0], state,
+                                  abstract[1], exclude_prims=("shard_map",))
+            if expect_zero:
+                assert n == 0, (name, b.key, n)
+            elif len(b.entries) > 1:  # single-entry buckets gather by reshape
+                assert n >= 1, (name, b.key, n)
+    print("traced buffers: OK (zero2 has no full fp32 gradient bucket)")
 
 
 def dp_step_two_way():
@@ -109,11 +192,92 @@ def dp_step_two_way():
     for k in glob:
         expect = glob[k] // 2 if glob[k] % 2 == 0 else glob[k]
         assert per_rank[k] == expect, (k, per_rank[k], glob[k])
-    print(f"dp 2-way: OK (per-rank bucket bytes {sharded_bytes} "
+    print(f"dp 2-way zero1: OK (per-rank bucket bytes {sharded_bytes} "
           f"of {global_bytes} global)")
+
+
+def dp_step_two_way_zero2():
+    """Full dp train step, ZeRO-2 vs replicated, bitwise.  clip_norm is set
+    above the step's gradient norm in both paths: the global norm itself is
+    summed in a different order across the sharded matrix partition (psum
+    over shards vs per-leaf tree order), so the scale factor — exactly 1.0
+    when unclipped — is the one quantity that cannot match bitwise when the
+    clip is active."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.train.dp_step import init_dp_state, make_dp_train_step
+
+    mesh = jax.make_mesh((2,), ("data",))
+    cfg = get_config("gpt2-60m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+
+    opt_z2 = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                             shard_axis="data", shard_size=2)
+    opt_rep = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                              fused_apply=True)
+    st_z2, st_rep = opt_z2.init(params), opt_rep.init(params)
+    comp = init_dp_state(params)
+
+    step_z2 = jax.jit(make_dp_train_step(
+        cfg, opt_z2, mesh, zero2=True, opt_state=st_z2, compress=False,
+        clip_norm=1e6))
+    step_rep = jax.jit(make_dp_train_step(cfg, opt_rep, mesh, compress=False,
+                                          clip_norm=1e6))
+    p1, s1, _, m1 = step_z2(params, st_z2, comp, batch, jnp.int32(0))
+    p2, _, _, _ = step_rep(params, st_rep, comp, batch, jnp.int32(0))
+    for (k, a), (_, b) in zip(tree_paths(p1), tree_paths(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32),
+                                      err_msg=f"zero2: {k}")
+    assert np.isfinite(float(np.asarray(m1["loss"])))
+    # shard_size=2 pads every bucket (the L=1 embed bucket included) so
+    # every bucket is exactly halved per rank
+    for k, b in s1.buckets.items():
+        shard = b.addressable_shards[0].data
+        assert b.shape[0] % 2 == 0, (k, b.shape)
+        assert shard.shape[0] == b.shape[0] // 2, (k, shard.shape, b.shape)
+
+    # no full-bucket fp32 gradient intermediate per rank (all_gather carries
+    # the updated fp32 *weights* by design; reshapes are buffer-free views;
+    # the shard_map eqn's outvars are global-view avals of sharded outputs)
+    opt_tr = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                             shard_axis="data", shard_size=2)
+    st_tr = jax.eval_shape(opt_tr.init, params)
+    step_tr = make_dp_train_step(cfg, opt_tr, mesh, zero2=True,
+                                 opt_state=st_tr, compress=False,
+                                 clip_norm=1e6)
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+        (params, comp, batch))
+    for b in opt_tr.bucket_plan(params).buckets:
+        if any(e.shape == (b.padded, b.d_in, b.d_out) for e in b.entries):
+            # a single-leaf bucket whose shape IS the leaf shape: the
+            # *local* gradient leaf out of the backward pass collides with
+            # the bucket shape and the count cannot distinguish them
+            continue
+        n = count_buffer_eqns(step_tr, (b.padded, b.d_in, b.d_out),
+                              jnp.float32, abstract[0], st_tr, abstract[1],
+                              abstract[2], jnp.int32(0),
+                              exclude_prims=("all_gather", "reshape",
+                                             "shard_map"))
+        assert n == 0, (b.key, n)
+
+    # the compressed (int8 reduce-scatter) ZeRO-2 schedule trains
+    step_c = jax.jit(make_dp_train_step(
+        cfg, opt_z2, mesh, zero2=True, opt_state=st_z2, compress=True))
+    pc, sc, cc = params, opt_z2.init(params), comp
+    for i in range(3):
+        pc, sc, cc, mc = step_c(pc, sc, cc, batch, jnp.int32(i))
+        assert np.isfinite(float(np.asarray(mc["loss"]))), i
+    print("dp 2-way zero2: OK (bitwise vs replicated, padded buckets "
+          "halved, no fp32 grad bucket, int8 schedule trains)")
 
 
 if __name__ == "__main__":
     synthetic_four_way()
+    synthetic_traced_buffers()
     dp_step_two_way()
+    dp_step_two_way_zero2()
     print("ZERO_SHARD_OK")

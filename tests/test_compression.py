@@ -63,6 +63,93 @@ def test_error_feedback_accumulates_to_truth():
 # quantization still applies)
 # ---------------------------------------------------------------------------
 
+def test_compressed_mean_long_run_no_drift():
+    """Regression for the bf16-gather error-feedback bug: the bf16 rounding
+    of the all-gathered chunk sum (stage d) must be fed back into the error
+    accumulator alongside the int8 residual (stage a).  Without it the
+    accumulated compressed mean drifts from the exact mean by ~one bf16 ulp
+    *per step* (linear in T); with it the tracking error stays bounded by
+    the final error buffer — a few quantization steps, independent of T."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(7)
+    # values with plenty of bf16-invisible mantissa bits
+    g = {"w": jnp.asarray(rng.standard_normal(2 * _BLOCK) * 0.37 + 1.1,
+                          jnp.float32)}
+    state = init_compression_state(g)
+
+    step = jax.jit(shard_map(
+        lambda gg, s: compressed_mean(gg, s, "data", 1), mesh=mesh,
+        in_specs=(P(), P()), out_specs=(P(), P()), check_rep=False))
+
+    steps = 200
+    total_sent = np.zeros(g["w"].shape, np.float64)
+    for _ in range(steps):
+        mean, state = step(g, state)
+        total_sent += np.asarray(mean["w"], np.float64)
+    total_true = steps * np.asarray(g["w"], np.float64)
+    resid = np.abs(total_true - total_sent)
+    # bound: the final error buffer plus one quantization step of slack —
+    # NOT growing with `steps` (the unfixed code accumulates ~steps * 4e-3)
+    q, s = quantize_blockwise(jnp.asarray(g["w"]))
+    qstep = np.repeat(np.asarray(s), _BLOCK)
+    bound = np.abs(np.asarray(state.error["w"])) + qstep + 1e-4
+    assert np.all(resid <= bound), (
+        f"compressed mean drifts from exact over {steps} steps: "
+        f"max resid {resid.max():.4f} vs bound {bound.max():.4f}")
+
+
+def test_compressed_reduce_scatter_matches_mean_shard():
+    """ZeRO-2 leaf schedule on a degenerate 1-way axis: the returned shard
+    must equal the corresponding chunk of the compressed mean (identical
+    quantizer, no bf16 gather stage -> *exactly* the local fp32 sum), and
+    the residual must reconstruct v - deq."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compression import compressed_reduce_scatter_leaf
+
+    mesh = jax.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.standard_normal((1, 3, 8, 16)), jnp.float32)
+
+    out, resid = jax.jit(shard_map(
+        lambda x: compressed_reduce_scatter_leaf(x, "data", 1), mesh=mesh,
+        in_specs=(P(),), out_specs=(P(), P()), check_rep=False))(v)
+    assert out.shape == v.shape[1:]
+    q, s = quantize_blockwise(
+        jnp.pad(v.reshape(-1), (0, (-v.size) % _BLOCK)))
+    deq = dequantize_blockwise(q, s)[:v.size].reshape(v.shape)
+    # n_dev=1: shard == own dequantized chunk (fp32, no bf16 rounding)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(deq[0]))
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(v - deq),
+                               atol=1e-6)
+
+
+def test_compressed_mean_skip_leaves_untouched():
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(11)
+    grads = {"mat/w": jnp.asarray(rng.standard_normal(_BLOCK), jnp.float32),
+             "norm": jnp.asarray(rng.standard_normal(_BLOCK), jnp.float32)}
+    state = init_compression_state(grads)
+    out, new_state = jax.jit(shard_map(
+        lambda g, s: compressed_mean(g, s, "data", 1,
+                                     skip=lambda p: p.startswith("mat")),
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        check_rep=False))(grads, state)
+    # skipped leaf: passed through bit-identically, error untouched
+    np.testing.assert_array_equal(np.asarray(out["mat/w"]),
+                                  np.asarray(grads["mat/w"]))
+    np.testing.assert_array_equal(np.asarray(new_state.error["mat/w"]), 0.0)
+    # non-skipped leaf: quantized (error buffer engaged)
+    assert np.any(np.asarray(new_state.error["norm"]) != 0.0)
+
+
 def test_compressed_mean_close_to_exact():
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P

@@ -1,5 +1,5 @@
 """Single-pass fused apply (the update folded into the RMNP kernel) and
-ZeRO-1 optimizer-state sharding.
+ZeRO-1/2 sharding of the bucketed optimizer state and gradients.
 
 Invariants under test:
   * the fused-apply path (``Optimizer.update_apply``) is bit-for-bit with
@@ -12,10 +12,14 @@ Invariants under test:
   * kernel launches stay one per shape bucket;
   * bf16 momentum storage drifts boundedly from fp32 storage over a ~50
     step fused-apply run;
-  * ZeRO-1 sharding over a real multi-device CPU mesh: per-rank stacked
-    momentum bytes shrink N x and the sharded step matches the replicated
-    step bit-for-bit (subprocess — the device-count flag must precede jax
-    init);
+  * ZeRO-1 and ZeRO-2 sharding over a real multi-device CPU mesh: per-rank
+    stacked momentum bytes shrink N x (padded uneven buckets included), the
+    sharded steps match the replicated step bit-for-bit, and the ZeRO-2
+    step materializes no full-bucket fp32 gradient (subprocess — the
+    device-count flag must precede jax init);
+  * pad slices are zero-filled, inert, and dropped on scatter; a mis-sized
+    momentum buffer raises instead of slicing garbage; the plan cache is a
+    bounded LRU;
   * train steps dispatch on ``update_apply`` and the dp step validates its
     sharding preconditions.
 """
@@ -231,10 +235,17 @@ class TestBf16MomentumDrift:
 
 
 class TestZeroSharding:
+    @pytest.mark.skipif(os.environ.get("CI") == "true",
+                        reason="CI runs tests/_zero_shard_worker.py as a "
+                               "dedicated workflow step (visible output); "
+                               "running it here too would double the "
+                               "slowest job in the suite")
     def test_sharded_step_matches_replicated_subprocess(self):
-        """4-device CPU mesh: per-rank momentum = L/N slices (bytes shrink
-        N x), uneven-L buckets replicate, sharded == replicated bitwise,
-        and the full dp train step agrees end-to-end on a 2-way mesh."""
+        """4-device CPU mesh: per-rank momentum = padded L/N slices (bytes
+        shrink N x), uneven buckets pad + shard under shard_size, ZeRO-1
+        and ZeRO-2 both match the replicated step bitwise, the ZeRO-2 step
+        traces with zero full-bucket fp32 gradient intermediates, and the
+        full dp train step agrees end-to-end on a 2-way mesh."""
         worker = Path(__file__).parent / "_zero_shard_worker.py"
         env = dict(os.environ,
                    XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
@@ -270,6 +281,22 @@ class TestZeroSharding:
         with pytest.raises(ValueError, match="opt_state"):
             make_dp_train_step(cfg, opt, mesh, shard_state=True)
 
+    def test_zero2_requires_sharded_optimizer(self):
+        """zero2 needs update_apply_sharded (shard_axis + shard_size at
+        optimizer construction); a plain fused-apply optimizer must be
+        rejected up front, not fail mid-trace."""
+        from repro.configs import get_config
+        from repro.train.dp_step import make_dp_train_step
+
+        mesh = jax.make_mesh((1,), ("data",))
+        cfg = get_config("gpt2-60m").reduced()
+        opt = mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                              fused_apply=True)
+        state = jax.eval_shape(
+            opt.init, {"a/w": jnp.zeros((8, 16), jnp.float32)})
+        with pytest.raises(ValueError, match="update_apply_sharded"):
+            make_dp_train_step(cfg, opt, mesh, zero2=True, opt_state=state)
+
     def test_bucket_specs_ignores_param_paths_named_buckets(self):
         """Only the state's top-level `buckets` field is stacked momentum:
         a 3-D AdamW state leaf whose *parameter* path contains 'buckets'
@@ -302,6 +329,134 @@ class TestZeroSharding:
         # size-1 mesh axis: every bucket falls back to replication
         assert all(all(ax is None for ax in s)
                    for s in specs.buckets.values())
+
+
+class TestPaddedBuckets:
+    """Uneven-bucket padding (shard_size): pad slices are zero-filled,
+    mathematically inert, and dropped on scatter — so the padded optimizer
+    is bit-identical to the unpadded one wherever both run."""
+
+    def test_padded_replicated_matches_unpadded(self):
+        params = make_tree(RAGGED_SHAPES)
+        pad = rmnp(constant(0.1), beta=0.9, shard_axis="data", shard_size=4)
+        ref = rmnp(constant(0.1), beta=0.9, fused_apply=True)
+        sizes = {b.key: b.size for b in ref.bucket_plan(params).buckets}
+        sp, sr = pad.init(params), ref.init(params)
+        pp, pr = params, params
+        for step in range(3):
+            grads = make_tree(RAGGED_SHAPES, seed=50 + step)
+            pp, sp = jax.jit(pad.update_apply)(grads, sp, pp, jnp.int32(step))
+            pr, sr = jax.jit(ref.update_apply)(grads, sr, pr, jnp.int32(step))
+            for k in pp:
+                np.testing.assert_array_equal(np.asarray(pp[k]),
+                                              np.asarray(pr[k]), err_msg=k)
+            for k, v in sp.buckets.items():
+                assert v.shape[0] % 4 == 0, (k, v.shape)
+                np.testing.assert_array_equal(
+                    np.asarray(v[:sizes[k]]), np.asarray(sr.buckets[k]))
+                # pad-slice invariant: zero grad -> zero momentum, forever
+                assert np.all(np.asarray(v[sizes[k]:]) == 0), (k, step)
+
+    def test_gather_pads_zero_scatter_drops(self):
+        from repro.core.bucketing import build_plan, gather, scatter
+
+        tree = make_tree({"a/w": (3, 8, 16)})
+        plan = build_plan(tree, pad_multiple=4)
+        (b,) = plan.buckets
+        assert (b.size, b.padded) == (3, 4)
+        g = gather(plan, tree, dtype=jnp.float32)["8x16"]
+        assert g.shape == (4, 8, 16)
+        assert np.all(np.asarray(g[3:]) == 0)
+        out = scatter(plan, {"8x16": g}, tree)
+        np.testing.assert_array_equal(np.asarray(out["a/w"]),
+                                      np.asarray(tree["a/w"]))
+
+    def test_shard_size_needs_axis(self):
+        with pytest.raises(ValueError, match="shard_axis"):
+            rmnp(constant(0.1), shard_size=4)
+        with pytest.raises(ValueError, match="shard_axis"):
+            mixed_optimizer("rmnp", constant(0.1), constant(0.05),
+                            shard_size=4)
+
+
+class TestShardInference:
+    """bucket_update_apply must validate the momentum slice count instead of
+    inferring sharding from any size mismatch — a stale or mis-meshed buffer
+    would otherwise produce a garbage dynamic_slice."""
+
+    def test_missized_momentum_raises(self):
+        from repro.core.bucketing import bucket_update_apply, build_plan
+
+        params = make_tree({"a/w": (8, 16), "b/w": (2, 8, 16), "c/w": (8, 16)})
+        (b,) = build_plan(params).buckets  # L=4
+        g = jnp.zeros((4, 8, 16), jnp.float32)
+        w = jnp.zeros((4, 8, 16), jnp.float32)
+        v_bad = jnp.zeros((3, 8, 16), jnp.float32)  # 4 % 3 != 0
+        with pytest.raises(ValueError) as ei:
+            bucket_update_apply(b, g, v_bad, w, scale=0.1, weight_decay=0.0,
+                                beta=0.9, eps=1e-8, shard_axis="data")
+        msg = str(ei.value)
+        assert "8x16" in msg and "3" in msg and "4" in msg
+
+    def test_missized_operands_raise(self):
+        from repro.core.bucketing import bucket_update_apply, build_plan
+
+        params = make_tree({"a/w": (8, 16), "b/w": (2, 8, 16), "c/w": (8, 16)})
+        (b,) = build_plan(params).buckets
+        v = jnp.zeros((4, 8, 16), jnp.float32)
+        g_bad = jnp.zeros((3, 8, 16), jnp.float32)
+        with pytest.raises(ValueError, match="padded bucket"):
+            bucket_update_apply(b, g_bad, v, g_bad, scale=0.1,
+                                weight_decay=0.0, beta=0.9, eps=1e-8)
+
+    def test_sharded_without_axis_raises(self):
+        from repro.core.bucketing import bucket_update_apply, build_plan
+
+        params = make_tree({"a/w": (8, 16), "b/w": (2, 8, 16), "c/w": (8, 16)})
+        (b,) = build_plan(params).buckets
+        g = jnp.zeros((4, 8, 16), jnp.float32)
+        v_shard = jnp.zeros((2, 8, 16), jnp.float32)
+        with pytest.raises(ValueError, match="shard_axis"):
+            bucket_update_apply(b, g, v_shard, g, scale=0.1,
+                                weight_decay=0.0, beta=0.9, eps=1e-8)
+
+
+class TestPlanCache:
+    """The leaf->bucket plan cache must stay bounded when one optimizer
+    serves many param signatures (long-lived serving processes)."""
+
+    def test_lru_eviction_and_hit_order(self):
+        from repro.core.bucketing import PlanCache
+
+        cache = PlanCache(maxsize=2)
+        builds = []
+        get = lambda k: cache.get(k, lambda: builds.append(k) or k)
+        assert get("a") == "a" and get("b") == "b"
+        assert get("a") == "a"          # hit: refreshes 'a'
+        get("c")                        # evicts 'b' (LRU), not 'a'
+        assert len(cache) == 2
+        get("a")
+        assert builds == ["a", "b", "c"]  # 'a' never rebuilt
+        get("b")                        # rebuilt after eviction
+        assert builds == ["a", "b", "c", "b"]
+
+    def test_optimizer_plan_cache_bounded(self):
+        opt = rmnp(constant(0.1), fused_apply=True)
+        step = None
+        for i in range(12):  # > PlanCache default maxsize
+            shapes = {"w": (8, 16 + 8 * i)}
+            params = make_tree(shapes, seed=i)
+            grads = make_tree(shapes, seed=100 + i)
+            p, s = opt.update_apply(grads, opt.init(params), params,
+                                    jnp.int32(0))
+            assert p["w"].shape == params["w"].shape
+        # the internal cache is a closure; its bound is observable through
+        # PlanCache itself (above) — here we only require correctness to
+        # survive arbitrary signature churn, including re-visiting old ones
+        params = make_tree({"w": (8, 16)}, seed=0)
+        grads = make_tree({"w": (8, 16)}, seed=200)
+        p, _ = opt.update_apply(grads, opt.init(params), params, jnp.int32(0))
+        assert p["w"].shape == (8, 16)
 
 
 class TestTrainStepDispatch:

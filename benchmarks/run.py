@@ -1,6 +1,7 @@
 """Benchmark entry point — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME ...]
+    PYTHONPATH=src python -m benchmarks.run --summarize   # aggregate only
 
 | module          | paper artifact                          |
 |-----------------|------------------------------------------|
@@ -9,14 +10,26 @@
 | dominance       | Figs 4/5 (Gram diagonal dominance)       |
 | lr_sweep        | Tables 9-13 (matrix-LR sensitivity)      |
 | roofline_report | deliverable (g), from dry-run artifacts  |
+| overlap         | ZeRO-2 serialized-vs-pipelined step time |
+
+``overlap`` is opt-in here (``--only overlap``): run it directly
+(``python -m benchmarks.overlap``) to get the 4-device CPU mesh — via
+this driver jax is already initialized with however many devices exist.
+
+After the benches, every ``artifacts/bench/BENCH_*.json`` is aggregated
+into ``BENCH_summary.json`` (stable schema: artifact name -> headline
+ms/bytes numbers) so the perf trajectory stays machine-readable across
+PRs regardless of which individual benches ran.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 from benchmarks import convergence, dominance, lr_sweep, precond_time, roofline_report
+from benchmarks.common import ARTIFACTS
 
 BENCHES = {
     "precond_time": lambda full: precond_time.main([] if full else ["--quick"]),
@@ -27,15 +40,102 @@ BENCHES = {
     "lr_sweep": lambda full: lr_sweep.main(
         [] if full else ["--steps", "120"]),
     "roofline_report": lambda full: roofline_report.main([]),
+    "overlap": lambda full: _overlap(full),
 }
+
+
+def _overlap(full: bool):
+    from benchmarks import overlap
+    return overlap.main([] if full else
+                        ["--accum", "1", "4", "--iters", "2", "--batch", "16"])
+
+
+# small identifying keys kept verbatim so summary rows map back to their
+# configuration across PRs even when record counts or ordering change
+_ID_KEYS = ("bench", "size", "arch", "wire", "accum", "n_dev", "batch",
+            "seq", "layers", "d_model", "timed_backend")
+
+
+def _headline(record: dict) -> dict:
+    """The stable machine-readable slice of one benchmark record: its
+    identifying config keys, every scalar timing normalized to milliseconds
+    (``*_s`` -> ``*_ms``), byte counts and speedups kept as-is, plus
+    ``n_*`` structural counts."""
+    out = {}
+    for k, v in record.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            if k in _ID_KEYS and isinstance(v, str):
+                out[k] = v
+            continue
+        if k in _ID_KEYS:
+            out[k] = v
+        elif k.endswith("_s"):
+            out[k[:-2] + "_ms"] = 1e3 * v
+        elif (k.endswith("_ms") or "bytes" in k or k.endswith("speedup")
+              or k.startswith("n_")):
+            out[k] = v
+    return out
+
+
+def summarize() -> dict:
+    """Aggregate all ``artifacts/bench/BENCH_*.json`` into
+    ``BENCH_summary.json``.
+
+    Schema (stable across PRs — additive only):
+
+        {"schema": 1,
+         "benches": {"<artifact name>": {
+             "n_records": int,
+             "headline": {<metric>_ms | <metric>_bytes | *speedup: number},
+             "records": [per-record headline dicts]}}}
+
+    The ``headline`` is the last record's (benches order their records
+    smallest-to-largest / baseline-to-best, so the last row is the
+    headline configuration)."""
+    benches = {}
+    for path in sorted(ARTIFACTS.glob("BENCH_*.json")):
+        if path.name == "BENCH_summary.json":
+            continue
+        try:
+            payload = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[summary] skipping unreadable {path.name}: {e!r}")
+            continue
+        records = payload if isinstance(payload, list) else [payload]
+        records = [r for r in records if isinstance(r, dict)]
+        rows = [_headline(r) for r in records]
+        rows = [r for r in rows if r]
+        # headline = the last row carrying an actual ms/bytes/speedup metric
+        # (benches order rows baseline-to-best; trailing structural-report
+        # rows must not displace the timing headline)
+        timed = [r for r in rows
+                 if any(k.endswith("_ms") or "bytes" in k
+                        or k.endswith("speedup") for k in r)]
+        benches[path.stem] = {
+            "n_records": len(records),
+            "headline": (timed or rows or [{}])[-1],
+            "records": rows,
+        }
+    summary = {"schema": 1, "benches": benches}
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    out = ARTIFACTS / "BENCH_summary.json"
+    out.write_text(json.dumps(summary, indent=1))
+    print(f"[summary] {len(benches)} artifacts -> {out}")
+    return summary
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--summarize", action="store_true",
+                    help="only aggregate existing BENCH_*.json artifacts "
+                         "into BENCH_summary.json (no benches run)")
     args = ap.parse_args()
-    names = args.only or list(BENCHES)
+    if args.summarize:
+        summarize()
+        return
+    names = args.only or [n for n in BENCHES if n != "overlap"]
     failures = []
     for name in names:
         print(f"\n{'=' * 70}\n== benchmark: {name}\n{'=' * 70}", flush=True)
@@ -46,6 +146,7 @@ def main() -> None:
         except Exception as e:  # keep running the rest, fail at the end
             failures.append(name)
             print(f"[{name}] FAILED: {e!r}", flush=True)
+    summarize()
     if failures:
         print(f"\nFAILED benchmarks: {failures}")
         sys.exit(1)

@@ -214,12 +214,7 @@ def gather_chunks(plan: BucketPlan, tree: PyTree, n_chunks: int,
     by_path = dict(tree_paths(tree))
     out = {}
     for b in plan.buckets:
-        if b.padded % n_chunks:
-            raise ValueError(
-                f"bucket {b.key!r}: padded size {b.padded} is not divisible "
-                f"by n_chunks={n_chunks} — build the plan with "
-                f"pad_multiple=n_chunks (optimizer shard_size)")
-        csize = b.padded // n_chunks
+        csize = _chunk_size(b, n_chunks)
         parts, pad_dtype = _bucket_parts(b, by_path, dtype)
         chunks = []
         for j in range(n_chunks):
@@ -237,6 +232,43 @@ def gather_chunks(plan: BucketPlan, tree: PyTree, n_chunks: int,
                           else jnp.concatenate(pieces, axis=0))
         out[b.key] = jnp.stack(chunks, axis=0)
     return out
+
+
+def _chunk_size(bucket: Bucket, n_chunks: int) -> int:
+    """Per-chunk slice count of a bucket split ``n_chunks`` ways; raises
+    (naming the fix) when the padded size does not divide."""
+    if bucket.padded % n_chunks:
+        raise ValueError(
+            f"bucket {bucket.key!r}: padded size {bucket.padded} is not "
+            f"divisible by n_chunks={n_chunks} — build the plan with "
+            f"pad_multiple=n_chunks (optimizer shard_size)")
+    return bucket.padded // n_chunks
+
+
+def init_chunk_acc(plan: BucketPlan, n_chunks: int,
+                   dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Zero-initialised chunked gradient accumulators, one ``(n_chunks,
+    padded_L / n_chunks, d_in, d_out)`` buffer per bucket — the carry of the
+    microbatch-accumulation scan (:func:`accumulate_chunks`)."""
+    return {b.key: jnp.zeros((n_chunks, _chunk_size(b, n_chunks), b.d_in,
+                              b.d_out), dtype)
+            for b in plan.buckets}
+
+
+def accumulate_chunks(plan: BucketPlan, tree: PyTree,
+                      acc: Dict[str, jax.Array], n_chunks: int,
+                      dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Fold one microbatch's planned leaves of ``tree`` into the chunked
+    per-bucket accumulators ``acc`` (from :func:`init_chunk_acc`).
+
+    The leaves are chunked *first* (:func:`gather_chunks`) and added in the
+    ``(n_chunks, padded_L / n_chunks, d_in, d_out)`` layout, so microbatch
+    gradient accumulation never materializes the monolithic ``(padded_L,
+    d_in, d_out)`` bucket — the ZeRO-2 invariant holds for ``accum > 1``.
+    Chunking is pure slicing (linear), so accumulate-then-reduce is exactly
+    the reduce of the accumulated per-leaf gradients."""
+    chunks = gather_chunks(plan, tree, n_chunks, dtype=dtype)
+    return {k: acc[k] + chunks[k] for k in acc}
 
 
 def scatter_chunks(plan: BucketPlan, chunks: Dict[str, jax.Array],

@@ -303,15 +303,34 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
         return new_params, FusedMixedState(momentum=momentum, nu=nu,
                                            buckets=v_b)
 
-    def update_apply_sharded(g_shards, grads, state, params, step):
+    def update_apply_bucket(bucket, g_shard, v_shard, w_chunks, step,
+                            clip_scale=None):
+        """One matrix bucket's whole ZeRO-2 chain — optional clip scale
+        folded into the gradient shard, fused kernel, updated-weight
+        all-gather — independent of every other bucket (the pipelined dp
+        step's per-bucket entry point).  Returns ``(w_new full padded
+        bucket, v_new shard)``."""
+        eta_m = lr_matrix(step)
+        scale = eta_m * rms_lr_scale((bucket.d_in, bucket.d_out))
+        g = g_shard if clip_scale is None else g_shard * clip_scale
+        return bucketing.bucket_update_apply_sharded(
+            bucket, g, v_shard, w_chunks, scale=scale,
+            weight_decay=weight_decay, beta=beta, eps=rn_eps,
+            use_kernel=use_kernel, shard_axis=shard_axis)
+
+    def update_apply_sharded(g_shards, grads, state, params, step,
+                             clip_scale=None):
         """ZeRO-2 single-pass apply (call inside ``shard_map``): matrix
         buckets consume this rank's reduce-scattered ``(padded L / N, d_in,
         d_out)`` fp32 mean-gradient shards from ``g_shards`` (their leaves
         in ``grads`` are ignored); AdamW leaves read their mean grads from
-        ``grads`` as usual and update in place.  Only the updated weight
-        slices are all-gathered — no full gradient bucket per rank."""
+        ``grads`` as usual — already clip-scaled by the caller — and update
+        in place.  The matrix partition is a loop over
+        ``update_apply_bucket`` (independent per-bucket chains;
+        ``clip_scale`` folds the global-norm clip into each chain).  Only
+        the updated weight slices are all-gathered — no full gradient
+        bucket per rank."""
         plan = _plan(params)
-        eta_m = lr_matrix(step)
         new_params, momentum, nu = adam_sweep(
             grads, state, params, step,
             emit=lambda u, p: p if u is None else p + u.astype(p.dtype))
@@ -331,12 +350,9 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
         w_chunks = bucketing.gather_chunks(plan, params, n_dev)
         w_b, v_b = {}, {}
         for bkt in plan.buckets:
-            scale = eta_m * rms_lr_scale((bkt.d_in, bkt.d_out))
-            w_b[bkt.key], v_b[bkt.key] = bucketing.bucket_update_apply_sharded(
+            w_b[bkt.key], v_b[bkt.key] = update_apply_bucket(
                 bkt, g_shards[bkt.key], state.buckets[bkt.key],
-                w_chunks[bkt.key], scale=scale, weight_decay=weight_decay,
-                beta=beta, eps=rn_eps, use_kernel=use_kernel,
-                shard_axis=shard_axis)
+                w_chunks[bkt.key], step, clip_scale)
         new_params = bucketing.scatter(plan, w_b, new_params, cast=True)
         return new_params, FusedMixedState(momentum=momentum, nu=nu,
                                            buckets=v_b)
@@ -345,4 +361,5 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
     return Optimizer(init=init, update=update,
                      update_apply=update_apply if fused_apply else None,
                      update_apply_sharded=update_apply_sharded if zero2 else None,
-                     bucket_plan=_plan)
+                     update_apply_bucket=update_apply_bucket if zero2 else None,
+                     bucket_plan=_plan, shard_size=shard_size)

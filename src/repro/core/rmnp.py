@@ -175,16 +175,32 @@ def _rmnp_fused(lr: Schedule, *, beta: float, weight_decay: float, eps: float,
         new_params = bucketing.scatter(plan, w_b, params, cast=True)
         return new_params, RmnpFusedState(buckets=v_b)
 
-    def update_apply_sharded(g_shards, grads, state, params, step):
+    def update_apply_bucket(bucket, g_shard, v_shard, w_chunks, step,
+                            clip_scale=None):
+        """One bucket's whole ZeRO-2 chain — optional clip scale folded into
+        the gradient shard, fused kernel, updated-weight all-gather — with
+        no dependence on any other bucket (the pipelined dp step's per-bucket
+        entry point).  Returns ``(w_new full padded bucket, v_new shard)``."""
+        eta = lr(step)
+        scale = eta * rms_lr_scale((bucket.d_in, bucket.d_out))
+        g = g_shard if clip_scale is None else g_shard * clip_scale
+        return bucketing.bucket_update_apply_sharded(
+            bucket, g, v_shard, w_chunks, scale=scale,
+            weight_decay=weight_decay, beta=beta, eps=eps,
+            use_kernel=use_kernel, shard_axis=shard_axis)
+
+    def update_apply_sharded(g_shards, grads, state, params, step,
+                             clip_scale=None):
         """ZeRO-2 single-pass apply (call inside ``shard_map``):
         ``g_shards`` maps bucket key -> this rank's reduce-scattered
         ``(padded L / N, d_in, d_out)`` fp32 mean-gradient shard; ``grads``
-        is unused (pure-matrix optimizer).  The kernel runs shard-in/
-        shard-out and only the updated weight slices are all-gathered —
-        no full gradient bucket, no full ``d`` bucket."""
+        is unused (pure-matrix optimizer).  A loop over
+        ``update_apply_bucket`` — each bucket's chain is independent, so the
+        scheduler can overlap one bucket's all-gather with another's kernel.
+        ``clip_scale`` (optional traced scalar) folds the global-norm clip
+        into each chain instead of pre-scaling the shards."""
         del grads
         plan = _plan(params)
-        eta = lr(step)
         n_dev = None
         for b in plan.buckets:
             n_b = bucketing.shard_count(b, state.buckets[b.key].shape[0])
@@ -199,11 +215,9 @@ def _rmnp_fused(lr: Schedule, *, beta: float, weight_decay: float, eps: float,
         w_chunks = bucketing.gather_chunks(plan, params, n_dev)
         w_b, v_b = {}, {}
         for b in plan.buckets:
-            scale = eta * rms_lr_scale((b.d_in, b.d_out))
-            w_b[b.key], v_b[b.key] = bucketing.bucket_update_apply_sharded(
+            w_b[b.key], v_b[b.key] = update_apply_bucket(
                 b, g_shards[b.key], state.buckets[b.key], w_chunks[b.key],
-                scale=scale, weight_decay=weight_decay, beta=beta, eps=eps,
-                use_kernel=use_kernel, shard_axis=shard_axis)
+                step, clip_scale)
         new_params = bucketing.scatter(plan, w_b, params, cast=True)
         return new_params, RmnpFusedState(buckets=v_b)
 
@@ -213,4 +227,5 @@ def _rmnp_fused(lr: Schedule, *, beta: float, weight_decay: float, eps: float,
     return Optimizer(init=init, update=update,
                      update_apply=update_apply if fused_apply else None,
                      update_apply_sharded=update_apply_sharded if zero2 else None,
-                     bucket_plan=_plan)
+                     update_apply_bucket=update_apply_bucket if zero2 else None,
+                     bucket_plan=_plan, shard_size=shard_size)

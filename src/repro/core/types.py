@@ -29,17 +29,36 @@ class Optimizer:
     # no updates tree (and no apply_updates pass) ever exists.  Train steps
     # use it when present; None means two-pass update + apply_updates.
     update_apply: Optional[Callable[..., Any]] = None
-    # ZeRO-2 fused apply: (g_shards, grads, state, params, step) ->
-    # (new_params, state).  ``g_shards`` maps bucket key -> this rank's
-    # (padded L / N, d_in, d_out) fp32 *mean-gradient shard* (from a
-    # reduce-scatter inside shard_map); matrix leaves of ``grads`` are
-    # ignored, non-matrix leaves must already be mean-reduced.  Exposed by
-    # the fused-apply optimizers when built with shard_axis + shard_size.
+    # ZeRO-2 fused apply: (g_shards, grads, state, params, step, *,
+    # clip_scale=None) -> (new_params, state).  ``g_shards`` maps bucket key
+    # -> this rank's (padded L / N, d_in, d_out) fp32 *mean-gradient shard*
+    # (from a reduce-scatter inside shard_map); matrix leaves of ``grads``
+    # are ignored, non-matrix leaves must already be mean-reduced (and
+    # clip-scaled — ``clip_scale`` applies only to the matrix shards, folded
+    # into each bucket's chain so no pre-scaled shard buffers serialize the
+    # buckets).  Exposed by the fused-apply optimizers when built with
+    # shard_axis + shard_size.
     update_apply_sharded: Optional[Callable[..., Any]] = None
+    # per-bucket ZeRO-2 entry point: (bucket, g_shard, v_shard, w_chunks,
+    # step, clip_scale) -> (w_new full padded bucket, v_new shard).  One
+    # bucket's whole chain — clip scale, fused kernel, updated-weight
+    # all-gather — with no dependence on any other bucket.
+    # ``update_apply_sharded`` IS a loop over this plus the non-matrix
+    # sweep (the pipelined dp step enters through it); the per-bucket form
+    # is public for steps that need to drive buckets individually, e.g.
+    # emitting a bucket's update from inside the backward scan (ROADMAP:
+    # intra-backward streaming).  Contract-tested against
+    # update_apply_sharded in tests/test_pipeline.py.
+    update_apply_bucket: Optional[Callable[..., Any]] = None
     # params -> repro.core.bucketing.BucketPlan of the matrix partition
     # (same cached plan the update fns use).  The ZeRO-2 dp step needs it
     # to chunk the gradient buckets before the reduce-scatter.
     bucket_plan: Optional[Callable[[PyTree], Any]] = None
+    # the shard_size the optimizer was built with (pad multiple of every
+    # bucket's stacked L == the intended ZeRO shard-axis size).  The dp step
+    # validates it against the mesh axis up front — a mismatch otherwise
+    # surfaces as a shape error deep inside bucket_update_apply.
+    shard_size: int = 1
 
 
 class MixedState(NamedTuple):

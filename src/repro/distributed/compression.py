@@ -173,6 +173,23 @@ def exact_reduce_scatter(chunks: jax.Array, axis_name: str) -> jax.Array:
     return summed / n_dev
 
 
+def fold_error_chunks(plan, chunk_means, state: CompressionState,
+                      n_dev: int):
+    """Fold the per-leaf fp32 error-feedback accumulators into already-
+    chunked per-bucket mean-gradient operands.
+
+    The microbatch-accumulation path (train/pipeline.py) never holds the
+    matrix gradients per leaf — they are accumulated straight into the
+    ``(n_dev, chunk, d_in, d_out)`` layout — so the ``g + err`` fold of
+    :func:`compressed_mean_leaf` stage (a) happens here, in chunked form.
+    Chunking is pure slicing (linear) and pad-slice error is identically
+    zero, so this is bitwise the chunking of the per-leaf ``g + err``."""
+    from repro.core.bucketing import gather_chunks
+
+    err = gather_chunks(plan, state.error, n_dev, dtype=jnp.float32)
+    return {k: chunk_means[k] + err[k] for k in chunk_means}
+
+
 def compressed_reduce_scatter_leaf(v_chunks: jax.Array, axis_name: str,
                                    n_dev: int):
     """int8 error-feedback reduce-scatter of one chunked bucket operand.

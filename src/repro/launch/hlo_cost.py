@@ -206,6 +206,8 @@ _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_COMP_RE = re.compile(r"true_computation=%?([\w.\-]+)")
+_FALSE_COMP_RE = re.compile(r"false_computation=%?([\w.\-]+)")
 
 
 @dataclass
@@ -530,6 +532,127 @@ def analyze_hlo(text: str, default_group: int = 1) -> Dict:
         "bytes_accessed": cost.bytes,
         "collectives": cost.coll,
         "collective_wire_bytes": cost.collective_wire_bytes,
+    }
+
+
+def collective_overlap_report(text: str, buckets) -> Dict:
+    """Verify the bucket-pipelined ZeRO-2 structure in compiled HLO: no
+    bucket's gradient collective may data-depend on another bucket's update
+    output — that is the dependence that would serialize communication
+    behind compute and defeat the latency-hiding scheduler.
+
+    ``buckets``: iterable of ``(key, d_in, d_out)`` (e.g. from
+    ``BucketPlan.buckets``).  Ops are classified by opcode + result shape:
+
+    * *gradient collectives* — ``reduce-scatter`` / ``all-to-all`` ops
+      (sync or ``-start`` async form; int8 a2a included).  A rank-3 result
+      whose trailing dims match a bucket is attributed to it; int8/flat
+      operands stay unattributed but are still checked.
+    * *update outputs* — ``all-gather`` ops whose result trailing dims
+      match a bucket (the updated-weight gather of
+      ``bucket_update_apply_sharded``).  Flat bf16 gathers (the rest-leaf
+      compressed-mean stage) don't match and are ignored.
+
+    A *serialization edge* is (update-gather U, collective C) with U a
+    transitive ancestor of C.  Ancestry is computed over operand edges in
+    every computation, flowing through ``fusion`` / ``call`` / ``while`` /
+    ``conditional`` ops into their called computations (conservative: any
+    op inside a called computation is an ancestor of the caller's result).
+
+    Returns ``{"collectives": [...], "update_gathers": [...],
+    "serialization_edges": [(u, c, bucket_u, bucket_c), ...],
+    "n_serialization_edges": int}``.
+    """
+    comps, entry = parse_module(text)
+    by_shape = {}
+    for b in buckets:
+        key, d_in, d_out = b[0], int(b[1]), int(b[2])
+        by_shape[(d_in, d_out)] = key
+
+    def bucket_of(type_str: str):
+        dims = first_shape_dims(type_str)
+        if len(dims) >= 2:
+            return by_shape.get((dims[-2], dims[-1]))
+        return None
+
+    _CALLED_RES = (_CALLS_RE, _BODY_RE, _COND_RE, _TO_APPLY_RE,
+                   _TRUE_COMP_RE, _FALSE_COMP_RE)
+
+    def called_comps(op: Op) -> List[str]:
+        names = []
+        for rx in _CALLED_RES:
+            m = rx.search(op.attrs)
+            if m:
+                names.append(m.group(1))
+        m = _BRANCHES_RE.search(op.attrs)
+        if m:
+            names += _PCT_NAME.findall(m.group(1))
+        return [n for n in names if n in comps]
+
+    # index ops, classify
+    collectives, gathers = [], []
+    for comp in comps.values():
+        for op in comp.ops:
+            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if op.opcode.endswith("-done"):
+                continue
+            if base in ("reduce-scatter", "all-to-all"):
+                collectives.append((comp.name, op, bucket_of(op.type_str)))
+            elif base == "all-gather":
+                bk = bucket_of(op.type_str)
+                if bk is not None:
+                    gathers.append((comp.name, op, bk))
+
+    # forward data-flow graph over (computation, op) nodes: value -> its
+    # consumers.  Called computations are linked in BOTH directions — every
+    # op of a called computation feeds the caller op's result, and the
+    # caller op feeds every op of its called computations — so an edge
+    # survives a hop into a fusion/while/conditional body in either role
+    # (an update gather feeding a loop whose body holds a collective is
+    # still a serialization edge).  Conservative: flowing through a caller
+    # op reaches the whole body, not just the operand's true users.  Built
+    # once, walked iteratively — HLO operand chains run tens of thousands
+    # of ops deep, far past Python's recursion limit.
+    consumers: Dict[Tuple[str, str], List[Tuple[str, str]]] = {}
+    for comp in comps.values():
+        defs = {o.name for o in comp.ops}
+        for op in comp.ops:
+            node = (comp.name, op.name)
+            for dep in op.operands:
+                if dep in defs:
+                    consumers.setdefault((comp.name, dep), []).append(node)
+            for sub in called_comps(op):
+                subc = comps.get(sub)
+                if subc is not None:
+                    for o2 in subc.ops:
+                        consumers.setdefault((sub, o2.name), []).append(node)
+                        consumers.setdefault(node, []).append((sub, o2.name))
+
+    coll_ids = {(cname, op.name): (op.name, bk)
+                for cname, op, bk in collectives}
+    edges = []
+    for cname, op, bk in gathers:  # BFS descendants of each update gather
+        seen = {(cname, op.name)}
+        frontier = [(cname, op.name)]
+        while frontier:
+            node = frontier.pop()
+            for nxt in consumers.get(node, ()):
+                if nxt in seen:
+                    continue
+                seen.add(nxt)
+                frontier.append(nxt)
+                hit = coll_ids.get(nxt)
+                if hit is not None:
+                    edges.append((op.name, hit[0], bk, hit[1]))
+    return {
+        "collectives": [
+            {"name": op.name, "opcode": op.opcode, "bucket": bk,
+             "computation": cname} for cname, op, bk in collectives],
+        "update_gathers": [
+            {"name": op.name, "opcode": op.opcode, "bucket": bk,
+             "computation": cname} for cname, op, bk in gathers],
+        "serialization_edges": edges,
+        "n_serialization_edges": len(edges),
     }
 
 

@@ -35,8 +35,8 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
           dominance_every: int = 0, matrix_embed: bool = True,
           use_kernel: bool = False, fused: bool = False,
           momentum_dtype: str = "float32", fused_apply: bool = False,
-          zero2: bool = False, compress: bool = True,
-          log_file: str = "", stop_at: int = 0):
+          zero2: bool = False, compress: bool = True, accum: int = 1,
+          overlap: bool = True, log_file: str = "", stop_at: int = 0):
     """``stop_at`` simulates a crash: train to that step (schedules still
     span ``steps``) and exit WITHOUT the final checkpoint.
 
@@ -49,7 +49,12 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
     with the matrix momentum *and* gradient buckets sharded over the data
     axis — reduce-scatter straight into the bucket shard, padded uneven
     buckets included (``compress`` picks the int8 error-feedback schedule
-    over the exact fp32 collectives)."""
+    over the exact fp32 collectives).  ``accum`` splits each rank's batch
+    into that many microbatches (scan accumulation — on the ZeRO-2 path
+    the matrix grads accumulate directly in the chunked per-rank layout);
+    ``overlap`` picks the bucket-pipelined ZeRO-2 schedule (independent
+    per-bucket reduce-scatter/update chains, two-phase clip) over the
+    serialized baseline."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -77,10 +82,11 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
         from repro.train.dp_step import init_dp_state, make_dp_train_step
         step_fn = make_dp_train_step(
             cfg, opt, mesh, shard_state=True, zero2=True, compress=compress,
-            opt_state=opt_state, remat="none" if reduced else "full")
+            accum=accum, overlap=overlap, opt_state=opt_state,
+            remat="none" if reduced else "full")
         comp_state = init_dp_state(params)
     else:
-        step_fn = make_train_step(cfg, opt,
+        step_fn = make_train_step(cfg, opt, num_microbatches=accum,
                                   remat="none" if reduced else "full")
         comp_state = None
 
@@ -190,6 +196,17 @@ def main():
     ap.add_argument("--no-compress", action="store_true",
                     help="with --zero2: exact fp32 collectives instead of "
                          "the int8 error-feedback schedule")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="microbatch gradient-accumulation factor (lax.scan "
+                         "over accum microbatches per rank; with --zero2 "
+                         "matrix grads accumulate directly in the chunked "
+                         "per-destination-rank layout — the monolithic fp32 "
+                         "gradient bucket never exists)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="with --zero2: serialized all-reduce-then-all-"
+                         "update schedule instead of the bucket-pipelined "
+                         "step (independent per-bucket collective/update "
+                         "chains, two-phase global-norm clip)")
     ap.add_argument("--no-matrix-embed", action="store_true",
                     help="AdamW on LM-head/embeddings (paper App D.4 ablation)")
     ap.add_argument("--stop-at", type=int, default=0,
@@ -204,6 +221,7 @@ def main():
           use_kernel=args.use_kernel, fused=args.fused,
           momentum_dtype=args.momentum_dtype, fused_apply=args.fused_apply,
           zero2=args.zero2, compress=not args.no_compress,
+          accum=args.accum, overlap=not args.no_overlap,
           log_file=args.log_file, stop_at=args.stop_at)
 
 

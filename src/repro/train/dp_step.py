@@ -1,5 +1,6 @@
-"""Explicit data-parallel train step with compressed gradient reduction
-and optional ZeRO optimizer-state / gradient sharding.
+"""Explicit data-parallel train step with compressed gradient reduction,
+optional ZeRO optimizer-state / gradient sharding, and an optionally
+bucket-pipelined ZeRO-2 schedule.
 
 The pjit train step (train/step.py) lets XLA choose the gradient
 reduction; this variant takes control of the cross-replica collective via
@@ -28,6 +29,21 @@ Optimizer state has three modes:
   ``(L, d_in, d_out)`` mean-gradient bucket never exists on any rank:
   per-rank gradient-bucket bytes drop by the axis size alongside the
   momentum, and only the updated param slices are all-gathered.
+
+Two knobs control the ZeRO-2 schedule (train/pipeline.py):
+
+* ``accum > 1`` splits the local batch into microbatches and runs the
+  backward as a ``lax.scan``, accumulating matrix gradients directly in
+  the chunked per-destination-rank layout — the monolithic fp32 gradient
+  bucket never exists even while accumulating.
+* ``overlap=True`` (the default) issues each bucket's reduce-scatter and
+  each bucket's fused update as independent per-bucket chains with the
+  global-norm clip reduced to a single psum'd scalar folded into every
+  bucket's update (two-phase clip) — no scaled-shard buffers or cross-
+  bucket data dependence between the collectives and the updates, so
+  XLA's latency-hiding scheduler can overlap them.  ``overlap=False``
+  keeps the serialized all-reduce-then-all-update order (the benchmark
+  baseline; per-leaf fp32 accumulation, pre-scaled gradient shards).
 """
 from __future__ import annotations
 
@@ -38,20 +54,20 @@ from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.core import apply_updates, clip_by_global_norm
-from repro.core.mixed import ClipStats
-from repro.core.types import Optimizer, PyTree, map_with_path, tree_paths
+from repro.core.types import Optimizer, PyTree
 from repro.distributed.compression import (
     CompressionState, compressed_mean, compressed_reduce_scatter_leaf,
     exact_mean, exact_reduce_scatter, init_compression_state,
 )
 from repro.distributed.sharding import bucket_specs
-from repro.models.model import loss_fn
+from repro.train import pipeline
 
 
 def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                        *, axis_name: str = "data", clip_norm: float = 1.0,
                        compress: bool = True, remat: str = "none",
                        shard_state: bool = False, zero2: bool = False,
+                       accum: int = 1, overlap: bool = True,
                        opt_state: PyTree = None):
     """(params, opt_state, comp_state, batch, step) -> (params, opt_state,
     comp_state, metrics).  Batch is sharded along ``axis_name``; params
@@ -61,11 +77,16 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
     per-bucket specs, and an optimizer built with ``fused_apply=True,
     shard_axis=axis_name``).  ``zero2=True`` (implies ``shard_state``)
     reduce-scatters the matrix gradient buckets straight into the shard;
-    it needs the optimizer built with ``shard_size=N`` as well (padded
-    buckets + ``update_apply_sharded``)."""
+    it needs the optimizer built with ``shard_size == the axis size``
+    (padded buckets + ``update_apply_sharded``).  ``accum`` splits the
+    local batch into that many microbatches (scan accumulation);
+    ``overlap`` picks the bucket-pipelined ZeRO-2 schedule over the
+    serialized baseline (no effect off the ZeRO-2 path)."""
     n_dev = mesh.shape[axis_name]
     if zero2:
         shard_state = True
+    if accum < 1:
+        raise ValueError(f"accum must be >= 1, got {accum}")
     state_spec = P()
     if shard_state:
         if opt.update_apply is None:
@@ -79,17 +100,36 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                 "shard_state=True needs opt_state (the real state or its "
                 "jax.eval_shape) to derive per-bucket partition specs")
         state_spec = bucket_specs(opt_state, mesh, {"bucket": axis_name})
-    if zero2 and (opt.update_apply_sharded is None or opt.bucket_plan is None):
-        raise ValueError(
-            "zero2=True requires an optimizer exposing update_apply_sharded "
-            "(rmnp/mixed_optimizer built with shard_axis=axis_name and "
-            "shard_size=the axis size): the ZeRO-2 step reduce-scatters "
-            "gradient buckets straight into the momentum shard")
+    if zero2:
+        if opt.update_apply_sharded is None or opt.bucket_plan is None:
+            raise ValueError(
+                "zero2=True requires an optimizer exposing "
+                "update_apply_sharded (rmnp/mixed_optimizer built with "
+                "shard_axis=axis_name and shard_size=the axis size): the "
+                "ZeRO-2 step reduce-scatters gradient buckets straight "
+                "into the momentum shard")
+        if opt.shard_size != n_dev:
+            # caught here, up front — a mismatch otherwise surfaces as an
+            # opaque shape error deep inside bucket_update_apply once the
+            # padded buckets fail to divide the mesh axis
+            raise ValueError(
+                f"zero2=True: the optimizer was built with shard_size="
+                f"{opt.shard_size} but mesh axis {axis_name!r} has {n_dev} "
+                f"devices — ZeRO-2 reduce-scatters each gradient bucket "
+                f"into exactly one chunk per rank, so the optimizer must "
+                f"be built with shard_size={n_dev}")
+
+    if zero2 and overlap:
+        local_step = pipeline.make_pipelined_zero2_step(
+            cfg, opt, axis_name=axis_name, n_dev=n_dev, clip_norm=clip_norm,
+            compress=compress, remat=remat, accum=accum)
+        return _wrap(local_step, mesh, axis_name, state_spec)
 
     def zero2_reduce(grads, comp_state):
-        """Matrix buckets: chunked reduce-scatter of the mean gradient
-        (full mean bucket never materializes); everything else: the usual
-        per-leaf mean.  Returns (g_shards, rest-mean grads, comp_state)."""
+        """Serialized baseline: chunked reduce-scatter of every bucket's
+        mean gradient (full mean bucket never materializes), then everything
+        else as the usual per-leaf mean.  Returns (g_shards, rest-mean
+        grads, comp_state, matrix paths)."""
         plan = opt.bucket_plan(grads)
         mat = plan.paths
         skip = lambda path: path in mat
@@ -118,37 +158,25 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                 g_shards[b.key] = exact_reduce_scatter(chunks[b.key],
                                                        axis_name)
             grads = exact_mean(grads, axis_name, skip=skip)
-        return g_shards, grads, comp_state, mat
-
-    def zero2_clip(g_shards, grads, mat):
-        """Global-norm clip across the sharded matrix partition and the
-        replicated rest.  The norm is the same quantity the replicated step
-        computes (matrix contributions arrive via psum over the shards), up
-        to float summation order."""
-        sq_rest = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                      for path, g in tree_paths(grads) if path not in mat)
-        sq_mat = sum(jnp.sum(jnp.square(s)) for s in g_shards.values())
-        sq_mat = jax.lax.psum(sq_mat, axis_name)
-        gnorm = jnp.sqrt(sq_rest + sq_mat)
-        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
-        g_shards = {k: s * scale for k, s in g_shards.items()}
-        # matrix leaves of the per-leaf tree are stale local grads the
-        # sharded optimizer ignores — scaling them would be dead work
-        grads = map_with_path(
-            lambda path, g: g if path in mat
-            else (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
-        stats = ClipStats(global_norm=gnorm,
-                          clipped=(gnorm > clip_norm).astype(jnp.float32))
-        return g_shards, grads, stats
+        return g_shards, grads, comp_state, plan
 
     def local_step(params, opt_state, comp_state, batch, step):
-        (loss, metrics), grads = jax.value_and_grad(
-            lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True)(params)
+        grads, metrics = pipeline.microbatch_grads(cfg, params, batch, accum,
+                                                   remat)
         if zero2:
-            g_shards, grads, comp_state, mat = zero2_reduce(grads, comp_state)
+            g_shards, grads, comp_state, plan = zero2_reduce(grads,
+                                                             comp_state)
             metrics = jax.tree_util.tree_map(
                 lambda m: jax.lax.pmean(m, axis_name), metrics)
-            g_shards, grads, clip_stats = zero2_clip(g_shards, grads, mat)
+            # same two-phase norm as the pipelined path (per-leaf partials,
+            # one psum, replicated summation order — satellite fix: stale
+            # matrix leaves never enter sq_rest and rest leaves are cast to
+            # fp32 exactly once), but the scale is applied the serialized
+            # way: pre-scaled shard buffers between collectives and updates
+            scale, rest32, clip_stats = pipeline.two_phase_clip(
+                plan, g_shards, grads, clip_norm, axis_name, n_dev)
+            g_shards = {k: s * scale for k, s in g_shards.items()}
+            grads = pipeline.scale_rest(grads, rest32, scale)
             params, opt_state = opt.update_apply_sharded(
                 g_shards, grads, opt_state, params, step)
         else:
@@ -170,6 +198,10 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                        clip_rate=clip_stats.clipped)
         return params, opt_state, comp_state, metrics
 
+    return _wrap(local_step, mesh, axis_name, state_spec)
+
+
+def _wrap(local_step, mesh, axis_name, state_spec):
     rep = P()
     batch_spec = P(axis_name)
     return shard_map(

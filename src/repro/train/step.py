@@ -69,6 +69,10 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, clip_norm: float = 1.0,
 
     def train_step(params, opt_state, batch, step):
         if num_microbatches > 1:
+            # same split/validation and microbatch-mean metrics as the dp
+            # pipeline (train/pipeline.py), so --accum means one thing
+            from repro.train.pipeline import split_microbatches
+
             def mb(carry, mb_batch):
                 acc = carry
                 g, m = grads_of(params, mb_batch)
@@ -76,14 +80,12 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, clip_norm: float = 1.0,
                     lambda a, x: a + x.astype(jnp.float32), acc, g)
                 return acc, m
 
-            split = jax.tree_util.tree_map(
-                lambda x: x.reshape((num_microbatches, x.shape[0] // num_microbatches)
-                                    + x.shape[1:]), batch)
+            split = split_microbatches(batch, num_microbatches)
             zero = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
             gsum, ms = jax.lax.scan(mb, zero, split)
             grads = jax.tree_util.tree_map(lambda g: g / num_microbatches, gsum)
-            metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+            metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m, axis=0), ms)
         else:
             grads, metrics = grads_of(params, batch)
 

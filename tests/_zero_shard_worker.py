@@ -19,7 +19,17 @@ is why this cannot run in the main pytest process).  Exercises:
     2-way mesh, ZeRO-1 and ZeRO-2: params after one update match the
     replicated step exactly and every bucket is halved per rank under
     ``shard_size=2``; the compressed (int8 reduce-scatter) ZeRO-2 step
-    trains to a finite loss.
+    trains to a finite loss;
+  * the bucket-pipelined ZeRO-2 step (train/pipeline.py) over the 4-way
+    mesh: pipelined ``accum=1`` is bitwise the replicated step (grad_norm
+    metric included), pipelined ``accum=4`` is bitwise the serialized
+    ``accum=4`` baseline and allclose to ``accum=1``, the monolithic fp32
+    gradient bucket still never materializes with ``accum=4``, and
+    ``collective_overlap_report`` finds zero cross-bucket serialization
+    edges in the compiled HLO (fp32 and int8 schedules);
+  * the two-phase clip on a synthetic tree whose leaves are each contained
+    in one rank's chunk: with the clip ACTIVE, ``grad_norm`` and the clip
+    scale are bit-for-bit the replicated ``clip_by_global_norm``'s.
 
 Prints ``ZERO_SHARD_OK`` as the last line on success; any assertion error
 fails the subprocess (and therefore the parent test).
@@ -275,9 +285,198 @@ def dp_step_two_way_zero2():
           "halved, no fp32 grad bucket, int8 schedule trains)")
 
 
+def dp_step_pipelined_four_way():
+    """The bucket-pipelined ZeRO-2 step on the 4-way mesh: numerical
+    equivalence (pipelined accum=1 == replicated bitwise, grad_norm metric
+    included; pipelined accum=4 == serialized accum=4 bitwise; accum=4 ~=
+    accum=1 allclose), the accum>1 traced-buffer invariant, and the
+    compiled-HLO overlap report."""
+    from repro.configs import get_config
+    from repro.kernels.ops import count_buffer_eqns
+    from repro.launch.hlo_cost import collective_overlap_report
+    from repro.models import init_params
+    from repro.train.dp_step import init_dp_state, make_dp_train_step
+
+    mesh = jax.make_mesh((4,), ("data",))
+    cfg = get_config("gpt2-60m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (16, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+
+    opt = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                          shard_axis="data", shard_size=4)
+    opt_rep = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                              fused_apply=True)
+    st = opt.init(params)
+    comp = init_dp_state(params)
+
+    def run(step_fn, state):
+        return jax.jit(step_fn)(params, state, comp, batch, jnp.int32(0))
+
+    # pipelined accum=1 == replicated, bitwise — grad_norm included: the
+    # two-phase clip replays clip_by_global_norm's per-leaf summation order
+    # (per-rank partials over each leaf's slices, one psum)
+    p1, _, _, m1 = run(make_dp_train_step(
+        cfg, opt, mesh, zero2=True, opt_state=st, compress=False,
+        clip_norm=1e6), st)
+    p_rep, _, _, m_rep = run(make_dp_train_step(
+        cfg, opt_rep, mesh, compress=False, clip_norm=1e6),
+        opt_rep.init(params))
+    for (k, a), (_, b) in zip(tree_paths(p1), tree_paths(p_rep)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32),
+                                      err_msg=f"pipelined accum=1: {k}")
+    np.testing.assert_array_equal(
+        np.asarray(m1["grad_norm"]), np.asarray(m_rep["grad_norm"]),
+        err_msg="pipelined grad_norm != replicated grad_norm")
+
+    # pipelined accum=4 == serialized accum=4 bitwise (the restructure —
+    # chunked-in-scan accumulation, per-bucket chains, clip folded into the
+    # update — is numerically exact); accum=4 ~= accum=1 (fp32 association
+    # of the microbatch sums is the only difference)
+    p4, _, _, _ = run(make_dp_train_step(
+        cfg, opt, mesh, zero2=True, opt_state=st, compress=False,
+        clip_norm=1e6, accum=4), st)
+    p4s, _, _, _ = run(make_dp_train_step(
+        cfg, opt, mesh, zero2=True, opt_state=st, compress=False,
+        clip_norm=1e6, accum=4, overlap=False), st)
+    for (k, a), (_, b) in zip(tree_paths(p4), tree_paths(p4s)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32),
+                                      err_msg=f"pipelined vs serialized: {k}")
+    for (k, a), (_, b) in zip(tree_paths(p4), tree_paths(p1)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-6,
+                                   err_msg=f"accum=4 vs accum=1: {k}")
+
+    # compressed pipelined accum=4 == compressed serialized accum=4 bitwise
+    # (the int8 error-feedback fold in chunked layout is exact), and trains
+    pc, sc, cc, mc = run(make_dp_train_step(
+        cfg, opt, mesh, zero2=True, opt_state=st, compress=True, accum=4), st)
+    pcs, _, _, _ = run(make_dp_train_step(
+        cfg, opt, mesh, zero2=True, opt_state=st, compress=True, accum=4,
+        overlap=False), st)
+    for (k, a), (_, b) in zip(tree_paths(pc), tree_paths(pcs)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32),
+                                      err_msg=f"int8 pipelined: {k}")
+    assert np.isfinite(float(np.asarray(mc["loss"])))
+
+    # the monolithic fp32 gradient bucket still never exists with accum=4
+    st_tr = jax.eval_shape(opt.init, params)
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+        (params, comp, batch))
+    plan = opt.bucket_plan(params)
+    step_tr = make_dp_train_step(cfg, opt, mesh, zero2=True, opt_state=st_tr,
+                                 compress=False, clip_norm=1e6, accum=4)
+    for b in plan.buckets:
+        if any(e.shape == (b.padded, b.d_in, b.d_out) for e in b.entries):
+            continue  # leaf shape collides with the bucket shape
+        n = count_buffer_eqns(step_tr, (b.padded, b.d_in, b.d_out),
+                              jnp.float32, abstract[0], st_tr, abstract[1],
+                              abstract[2], jnp.int32(0),
+                              exclude_prims=("all_gather", "reshape",
+                                             "shard_map"))
+        assert n == 0, ("accum=4 full fp32 bucket", b.key, n)
+
+    # compiled-HLO structure: no bucket's collective data-depends on
+    # another bucket's update output (fp32 and int8 schedules)
+    bks = [(b.key, b.d_in, b.d_out) for b in plan.buckets]
+    for compress in (False, True):
+        step = make_dp_train_step(cfg, opt, mesh, zero2=True,
+                                  opt_state=st_tr, compress=compress,
+                                  accum=4)
+        hlo = jax.jit(step).lower(abstract[0], st_tr, abstract[1],
+                                  abstract[2], jnp.int32(0)).compile().as_text()
+        rep = collective_overlap_report(hlo, bks)
+        assert rep["collectives"], "no gradient collectives found in HLO"
+        assert len(rep["update_gathers"]) == len(plan.buckets), rep
+        assert rep["n_serialization_edges"] == 0, rep["serialization_edges"]
+    print("dp 4-way pipelined: OK (accum=1 bitwise vs replicated incl "
+          "grad_norm, accum=4 bitwise vs serialized, no fp32 grad bucket, "
+          "0 serialization edges)")
+
+
+def dp_step_shard_size_mismatch():
+    """A ZeRO-2 optimizer built with the wrong shard_size is rejected up
+    front, naming both numbers, instead of dying in a shape error inside
+    bucket_update_apply."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.train.dp_step import make_dp_train_step
+
+    mesh = jax.make_mesh((4,), ("data",))
+    cfg = get_config("gpt2-60m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                          shard_axis="data", shard_size=2)
+    st = jax.eval_shape(opt.init, params)
+    try:
+        make_dp_train_step(cfg, opt, mesh, zero2=True, opt_state=st)
+    except ValueError as e:
+        assert "shard_size=2" in str(e) and "4 devices" in str(e), e
+    else:
+        raise AssertionError("shard_size mismatch was not rejected")
+    print("shard_size mismatch: OK (rejected up front, both numbers named)")
+
+
+def two_phase_clip_bitwise():
+    """Satellite regression: on a tree whose every matrix leaf is contained
+    in a single rank's chunk (lead == padded/N per leaf), the two-phase
+    clip's grad_norm and scale are bit-for-bit clip_by_global_norm's on the
+    replicated mean gradient — with the clip ACTIVE, not just scale=1."""
+    from repro.core.mixed import clip_by_global_norm
+    from repro.train.pipeline import two_phase_clip
+
+    mesh = jax.make_mesh((4,), ("data",))
+    # bucket 8x16: 4 leaves of lead 2 -> padded 8, csize 2: each leaf is
+    # exactly one rank's chunk.  Plus a couple of 1-D "rest" leaves.  Each
+    # rank carries a *different* gradient tree (stacked along a leading
+    # rank axis, P("data")-sharded) like a real per-rank backward.
+    shapes = {**{f"l{i}/w": (2, 8, 16) for i in range(4)},
+              "norm/scale_1d": (33,), "head/bias_1d": (7,)}
+    trees = [make(10 + r, shapes) for r in range(4)]
+    stacked = {k: jnp.stack([t[k] for t in trees]) for k in trees[0]}
+    opt = rmnp(constant(0.1), beta=0.9, shard_axis="data", shard_size=4)
+    plan = opt.bucket_plan({k: v for k, v in make(0, shapes).items()
+                            if v.ndim >= 2})
+
+    def clipped(gs):
+        g = jax.tree_util.tree_map(lambda x: x[0], gs)  # this rank's tree
+        chunks = bucketing.gather_chunks(plan, g, 4, dtype=jnp.float32)
+        shards = {b.key: exact_reduce_scatter(chunks[b.key], "data")
+                  for b in plan.buckets}
+        mean = jax.tree_util.tree_map(
+            lambda x: jax.lax.pmean(x.astype(jnp.float32), "data"), g)
+        scale, _, stats = two_phase_clip(plan, shards, mean, 1.0, "data", 4)
+        return scale, stats.global_norm, mean
+
+    scale, gnorm, mean = jax.jit(shard_map(
+        clipped, mesh=mesh, in_specs=(P("data"),),
+        out_specs=(P(), P(), P()), check_rep=False))(stacked)
+    # replicated reference: clip_by_global_norm on the same mean gradient,
+    # with a clip norm BELOW gnorm so the clip is active
+    _, ref_stats = clip_by_global_norm(mean, 1.0)
+    ref_gnorm = np.asarray(ref_stats.global_norm)
+    assert float(ref_gnorm) > 1.0, "clip must be active for this test"
+    np.testing.assert_array_equal(np.asarray(gnorm), ref_gnorm,
+                                  err_msg="two-phase gnorm != replicated")
+    ref_scale = np.minimum(np.float32(1.0),
+                           np.float32(1.0) / (ref_gnorm + np.float32(1e-12)))
+    np.testing.assert_array_equal(np.asarray(scale), ref_scale,
+                                  err_msg="two-phase scale != replicated")
+    print(f"two-phase clip: OK (gnorm {float(gnorm):.6f} bitwise == "
+          "replicated, clip active)")
+
+
 if __name__ == "__main__":
     synthetic_four_way()
     synthetic_traced_buffers()
     dp_step_two_way()
     dp_step_two_way_zero2()
+    dp_step_pipelined_four_way()
+    dp_step_shard_size_mismatch()
+    two_phase_clip_bitwise()
     print("ZERO_SHARD_OK")

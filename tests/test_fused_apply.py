@@ -440,6 +440,64 @@ class TestPlanCache:
         get("b")                        # rebuilt after eviction
         assert builds == ["a", "b", "c", "b"]
 
+    def test_default_capacity_eight_eviction_order(self):
+        """The default cache holds 8 plans; filling past capacity evicts in
+        LRU order, refreshed entries survive."""
+        from repro.core.bucketing import PlanCache
+
+        cache = PlanCache()
+        assert cache.maxsize == 8
+        builds = []
+        get = lambda k: cache.get(k, lambda: builds.append(k) or k)
+        for k in "abcdefgh":
+            get(k)
+        assert len(cache) == 8
+        get("a")                          # refresh: 'b' is now LRU
+        get("i")                          # evicts 'b'
+        assert len(cache) == 8
+        assert builds == list("abcdefghi")
+        get("a")                          # still cached
+        assert builds == list("abcdefghi")
+        get("b")                          # rebuilt after eviction
+        assert builds == list("abcdefghib")
+
+    def test_hit_on_reused_signature(self):
+        """Two param trees with identical (path, shape) signatures share
+        the cached plan object — values don't matter, metadata does."""
+        opt = rmnp(constant(0.1), fused_apply=True)
+        shapes = {"a/w": (8, 16), "b/w": (2, 8, 16)}
+        plan1 = opt.bucket_plan(make_tree(shapes, seed=0))
+        plan2 = opt.bucket_plan(make_tree(shapes, seed=9))
+        assert plan1 is plan2
+        # a different signature builds a different plan...
+        plan3 = opt.bucket_plan(make_tree({"a/w": (8, 32)}))
+        assert plan3 is not plan1
+        # ...and the original signature still hits
+        assert opt.bucket_plan(make_tree(shapes, seed=4)) is plan1
+
+    def test_eviction_does_not_break_inflight_jitted_step(self):
+        """A jitted step whose plan gets evicted keeps working: the plan is
+        baked into the existing trace, and a re-trace (new signature churn
+        in between) just rebuilds it."""
+        opt = rmnp(constant(0.1), fused_apply=True)
+        shapes = {"w": (8, 16)}
+        params = make_tree(shapes, seed=0)
+        grads = make_tree(shapes, seed=1)
+        state = opt.init(params)
+        step = jax.jit(lambda g, s, p: opt.update_apply(g, s, p, 0))
+        p_before, _ = step(grads, state, params)
+        # churn > maxsize distinct signatures: the (8, 16) plan is evicted
+        for i in range(10):
+            churn = make_tree({"w": (8, 24 + 8 * i)}, seed=i)
+            opt.update_apply(make_tree({"w": (8, 24 + 8 * i)}, seed=50 + i),
+                             opt.init(churn), churn, jnp.int32(0))
+        # the in-flight jitted step still runs and agrees with its first
+        # result (cache hit in jit -> no retrace; the optimizer state was
+        # not donated here so the inputs are unchanged)
+        p_after, _ = step(grads, state, params)
+        np.testing.assert_array_equal(np.asarray(p_before["w"]),
+                                      np.asarray(p_after["w"]))
+
     def test_optimizer_plan_cache_bounded(self):
         opt = rmnp(constant(0.1), fused_apply=True)
         step = None

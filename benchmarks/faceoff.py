@@ -1,0 +1,155 @@
+"""Optimizer-family faceoff: equal-wall-clock convergence over every
+registered update rule, plus the bucketed-vs-per-leaf Muon dispatch bench.
+
+Section 1 (``faceoff``) extends ``benchmarks.convergence`` from the
+adamw/muon/rmnp trio to every registered optimizer (rmnp, muon, normuon,
+muown, nora, adamw), built through the constructor registry
+(``core.make_optimizer``) on the bucketed engine with an identical
+protocol.  Every history row carries ``wall_s``, so on top of the
+equal-step (tail-averaged) final loss the bench reports each optimizer's
+loss at the *largest common wall-clock* — the equal-wall-clock comparison
+the paper's tables imply (a cheaper preconditioner gets more steps into
+the same budget).
+
+Section 2 (``muon_dispatch``): per-step preconditioning wall-clock of
+bucketed Muon (one batched Newton-Schulz dispatch per shape bucket) vs the
+per-leaf baseline (one jitted Newton-Schulz dispatch per matrix, the
+one-launch-sequence-per-leaf execution of naive per-parameter loops).
+Records sweep from compute-dominated shapes (where the two are within a
+small factor — XLA CPU runs batched gemms as a per-slice loop) to the
+many-small-matrices dispatch-dominated regime where bucketing amortizes
+the per-dispatch cost across the whole bucket; the headline (last) record
+is the dispatch-dominated configuration.  Launch counts per step (exact,
+traced on the Pallas path) accompany the timings: the wall-clock ratio on
+real accelerators tracks the launch ratio, which is ``n_leaves`` to 1.
+
+Writes ``BENCH_faceoff.json`` (list of records), aggregated into
+``BENCH_summary.json`` by ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, time_fn, write_artifact
+from benchmarks.convergence import final_loss
+from repro.core import optimizer_names
+from repro.core.muon import newton_schulz
+from repro.launch.train import train
+
+# per-family tuned matrix LR (lr_sweep protocol: each optimizer gets its
+# own); the NS family shares Muon's, the row-norm family shares RMNP's
+FACEOFF_LRS = {
+    "adamw": (1e-3, 1e-3),
+    "muon": (2e-2, 3e-3),
+    "normuon": (2e-2, 3e-3),
+    "muown": (2e-2, 3e-3),
+    "rmnp": (2e-2, 3e-3),
+    "nora": (2e-2, 3e-3),
+}
+
+
+def loss_at_wall(history, budget_s: float) -> float:
+    """Loss of the last logged row inside the wall-clock budget."""
+    rows = [h for h in history if h["wall_s"] <= budget_s]
+    return (rows[-1] if rows else history[0])["loss"]
+
+
+def bench_faceoff(arch: str, steps: int, batch: int, seq: int, seed: int):
+    recs = []
+    for name in optimizer_names():
+        lrm, lra = FACEOFF_LRS.get(name, (2e-2, 3e-3))
+        _, _, hist = train(arch, optimizer=name, steps=steps, batch=batch,
+                           seq=seq, lr_matrix=lrm, lr_adamw=lra,
+                           reduced=True, seed=seed, fused=True,
+                           log_every=max(1, steps // 20))
+        recs.append({"bench": "faceoff", "optimizer": name, "arch": arch,
+                     "steps": steps, "lr_matrix": lrm,
+                     "final_loss": final_loss(hist),
+                     "train_wall_s": hist[-1]["wall_s"],
+                     "history": hist})
+    # equal-wall-clock: compare everyone at the fastest optimizer's budget
+    budget = min(r["train_wall_s"] for r in recs)
+    for r in recs:
+        r["equal_wall_budget_s"] = budget
+        r["loss_at_equal_wall"] = loss_at_wall(r["history"], budget)
+    rows = [[r["optimizer"], f"{r['final_loss']:.4f}",
+             f"{r['loss_at_equal_wall']:.4f}", f"{r['train_wall_s']:.1f}"]
+            for r in recs]
+    print(f"\n== optimizer family faceoff ({arch}, {steps} steps, "
+          f"equal-wall budget {budget:.1f}s) ==")
+    print_table(["optimizer", "final loss", f"loss@{budget:.0f}s", "wall s"],
+                rows)
+    return recs
+
+
+# (n_leaves, d_in, d_out): compute-dominated first, dispatch-dominated
+# (many small matrices) last — the headline configuration
+DISPATCH_CONFIGS = ((48, 64, 64), (384, 16, 4), (384, 16, 2))
+
+
+def bench_muon_dispatch(ns_steps: int, iters: int):
+    recs = []
+    for n_leaves, d_in, d_out in DISPATCH_CONFIGS:
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              (n_leaves, d_in, d_out), jnp.float32)
+        ns_one = jax.jit(lambda v: newton_schulz(v, steps=ns_steps))
+        ns_bucket = jax.jit(lambda v: newton_schulz(v, steps=ns_steps))
+        leaves = [x[i] for i in range(n_leaves)]
+
+        def per_leaf():
+            return [ns_one(leaf) for leaf in leaves]
+
+        def bucketed():
+            return ns_bucket(x)
+
+        t_leaf = time_fn(per_leaf, iters=iters)
+        t_bucket = time_fn(bucketed, iters=iters)
+        # exact launch counts on the kernel path: 4 per NS iteration
+        # (Gram, G@G, polynomial, apply), per leaf vs per bucket
+        recs.append({"bench": "muon_dispatch", "n_leaves": n_leaves,
+                     "d_in": d_in, "d_out": d_out, "ns_steps": ns_steps,
+                     "per_leaf_step_s": t_leaf,
+                     "bucketed_step_s": t_bucket,
+                     "precond_speedup": t_leaf / t_bucket,
+                     "n_launches_per_leaf": 4 * ns_steps * n_leaves,
+                     "n_launches_bucketed": 4 * ns_steps})
+    rows = [[f"{r['n_leaves']}x({r['d_in']}x{r['d_out']})",
+             f"{1e3 * r['per_leaf_step_s']:.2f}",
+             f"{1e3 * r['bucketed_step_s']:.2f}",
+             f"{r['precond_speedup']:.1f}x",
+             f"{r['n_launches_per_leaf']}:{r['n_launches_bucketed']}"]
+            for r in recs]
+    print("\n== bucketed vs per-leaf Muon preconditioning (NS-"
+          f"{ns_steps}) ==")
+    print_table(["bucket", "per-leaf ms", "bucketed ms", "speedup",
+                 "launches"], rows)
+    return recs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-60m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ns-steps", type=int, default=5)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="dispatch bench only (no convergence runs)")
+    args = ap.parse_args(argv)
+
+    recs = []
+    if not args.skip_train:
+        recs += bench_faceoff(args.arch, args.steps, args.batch, args.seq,
+                              args.seed)
+    recs += bench_muon_dispatch(args.ns_steps, args.iters)
+    write_artifact("BENCH_faceoff", recs)
+    return recs
+
+
+if __name__ == "__main__":
+    main()

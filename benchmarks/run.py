@@ -11,6 +11,7 @@
 | lr_sweep        | Tables 9-13 (matrix-LR sensitivity)      |
 | roofline_report | deliverable (g), from dry-run artifacts  |
 | overlap         | ZeRO-2 serialized-vs-pipelined step time |
+| faceoff         | optimizer family, equal wall-clock; bucketed-vs-per-leaf Muon dispatch |
 
 ``overlap`` is opt-in here (``--only overlap``): run it directly
 (``python -m benchmarks.overlap``) to get the 4-device CPU mesh — via
@@ -28,7 +29,8 @@ import json
 import sys
 import time
 
-from benchmarks import convergence, dominance, lr_sweep, precond_time, roofline_report
+from benchmarks import (convergence, dominance, faceoff, lr_sweep,
+                        precond_time, roofline_report)
 from benchmarks.common import ARTIFACTS
 
 BENCHES = {
@@ -41,6 +43,9 @@ BENCHES = {
         [] if full else ["--steps", "120"]),
     "roofline_report": lambda full: roofline_report.main([]),
     "overlap": lambda full: _overlap(full),
+    "faceoff": lambda full: faceoff.main(
+        [] if full else ["--steps", "40", "--batch", "4", "--seq", "32",
+                         "--iters", "3"]),
 }
 
 
@@ -53,14 +58,15 @@ def _overlap(full: bool):
 # small identifying keys kept verbatim so summary rows map back to their
 # configuration across PRs even when record counts or ordering change
 _ID_KEYS = ("bench", "size", "arch", "wire", "accum", "n_dev", "batch",
-            "seq", "layers", "d_model", "timed_backend")
+            "seq", "layers", "d_model", "timed_backend", "optimizer",
+            "d_in", "d_out")
 
 
 def _headline(record: dict) -> dict:
     """The stable machine-readable slice of one benchmark record: its
     identifying config keys, every scalar timing normalized to milliseconds
     (``*_s`` -> ``*_ms``), byte counts and speedups kept as-is, plus
-    ``n_*`` structural counts."""
+    ``n_*`` structural counts and ``*loss*`` quality metrics."""
     out = {}
     for k, v in record.items():
         if isinstance(v, bool) or not isinstance(v, (int, float)):
@@ -72,7 +78,7 @@ def _headline(record: dict) -> dict:
         elif k.endswith("_s"):
             out[k[:-2] + "_ms"] = 1e3 * v
         elif (k.endswith("_ms") or "bytes" in k or k.endswith("speedup")
-              or k.startswith("n_")):
+              or k.startswith("n_") or "loss" in k):
             out[k] = v
     return out
 

@@ -1,16 +1,24 @@
-"""End-to-end driver: train the same model with AdamW, Muon and RMNP and
-compare loss curves + preconditioning cost (the paper's core experiment).
+"""End-to-end driver: train the same model with every optimizer in the
+constructor registry (AdamW, Muon, NorMuon, Muown, Nora, RMNP) and compare
+loss curves at equal steps AND equal wall-clock (the paper's core
+experiment, extended to the whole update-rule family).
 
     PYTHONPATH=src python examples/train_optimizer_faceoff.py \
-        [--arch gpt2-small] [--steps 300] [--full]
+        [--arch gpt2-small] [--steps 300] [--full] [--only muon rmnp]
 
 Uses the full training stack: config -> mesh -> deterministic synthetic
-stream -> mixed optimizer -> pjit'd train step -> checkpoint manager.
+stream -> registry-built mixed optimizer on the bucketed engine -> pjit'd
+train step -> checkpoint manager.
 """
 import argparse
-import time
+import sys
+from pathlib import Path
 
-from repro.launch.train import train
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks.*
+
+from benchmarks.faceoff import FACEOFF_LRS, loss_at_wall  # noqa: E402
+from repro.core import optimizer_names  # noqa: E402
+from repro.launch.train import train  # noqa: E402
 
 
 def main():
@@ -20,24 +28,29 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None,
+                    choices=list(optimizer_names()),
+                    help="subset of registered optimizers to race")
     args = ap.parse_args()
 
     results = {}
-    for opt, lrm, lra in (("adamw", 1e-3, 1e-3),
-                          ("muon", 2e-2, 3e-3),
-                          ("rmnp", 2e-2, 3e-3)):
+    for opt in (args.only or optimizer_names()):
+        lrm, lra = FACEOFF_LRS.get(opt, (2e-2, 3e-3))
         print(f"\n=== {opt} ===")
-        t0 = time.time()
         _, _, hist = train(args.arch, optimizer=opt, steps=args.steps,
                            batch=args.batch, seq=args.seq,
                            lr_matrix=lrm, lr_adamw=lra,
-                           reduced=not args.full,
+                           reduced=not args.full, fused=True,
                            log_every=max(1, args.steps // 10))
-        results[opt] = {"final": hist[-1]["loss"], "wall_s": time.time() - t0}
+        results[opt] = {"final": hist[-1]["loss"], "history": hist,
+                        "wall_s": hist[-1]["wall_s"]}
 
-    print("\n=== summary ===")
+    budget = min(r["wall_s"] for r in results.values())
+    print(f"\n=== summary (equal-wall budget {budget:.1f}s) ===")
     for opt, r in results.items():
-        print(f"{opt:6s} final-loss {r['final']:.4f}  wall {r['wall_s']:.1f}s")
+        at_budget = loss_at_wall(r["history"], budget)
+        print(f"{opt:8s} final-loss {r['final']:.4f}  "
+              f"loss@{budget:.0f}s {at_budget:.4f}  wall {r['wall_s']:.1f}s")
     best = min(results, key=lambda k: results[k]["final"])
     print(f"\nbest final loss: {best} "
           f"(paper: RMNP matches or beats Muon, both beat AdamW)")

@@ -1,5 +1,6 @@
-"""Core library: the paper's contribution (RMNP) plus the Muon / AdamW
-baselines, mixed update strategy, schedules and preconditioner diagnostics."""
+"""Core library: the paper's contribution (RMNP) plus the Muon / NorMuon /
+Muown / Nora / AdamW family, mixed update strategy, the generic bucketed
+engine, schedules and preconditioner diagnostics."""
 from repro.core.adamw import adamw  # noqa: F401
 from repro.core.bucketing import (  # noqa: F401
     BucketPlan,
@@ -7,6 +8,7 @@ from repro.core.bucketing import (  # noqa: F401
     fused_rownorm_update,
 )
 from repro.core.dominance import dominance_ratios, global_dominance  # noqa: F401
+from repro.core.engine import BucketedState  # noqa: F401
 from repro.core.mixed import (  # noqa: F401
     ClipStats,
     FusedMixedState,
@@ -17,6 +19,13 @@ from repro.core.mixed import (  # noqa: F401
     momentum_for_diagnostics,
 )
 from repro.core.muon import muon, newton_schulz  # noqa: F401
+from repro.core.registry import make_optimizer, optimizer_names  # noqa: F401
 from repro.core.rmnp import rmnp, rms_lr_scale, row_normalize  # noqa: F401
+from repro.core.rules import (  # noqa: F401
+    MatrixUpdateRule,
+    make_rule,
+    per_leaf_reference,
+    rule_names,
+)
 from repro.core.schedule import constant, cosine_with_warmup  # noqa: F401
 from repro.core.types import Optimizer, apply_updates  # noqa: F401

@@ -1,4 +1,5 @@
-"""The paper's mixed update strategy: matrix parameters -> RMNP / Muon,
+"""The paper's mixed update strategy: matrix parameters -> any registered
+matrix update rule (RMNP, Muon, NorMuon, Muown, Nora — core/rules.py),
 everything else (norms, biases, 1-D SSM params, optionally embeddings and the
 LM head) -> AdamW.  Includes global-norm gradient clipping with clip-rate
 tracking (paper Appendix E.7).
@@ -6,6 +7,9 @@ tracking (paper Appendix E.7).
 Implemented as a single per-leaf-dispatch optimizer so the whole state is one
 pytree (momentum for matrix leaves, Adam (mu, nu) for the rest) — this keeps
 pjit sharding of optimizer state trivially aligned with parameter sharding.
+The fused path composes the generic bucketed engine (core/engine.py) with
+the per-leaf AdamW sweep, so every rule in the family inherits ZeRO-1/2
+sharding, padded uneven buckets and the pipelined dp step unchanged.
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ import jax.numpy as jnp
 from repro.core import bucketing
 from repro.core.muon import newton_schulz
 from repro.core.rmnp import rms_lr_scale, row_normalize
+from repro.core.rules import MatrixUpdateRule, make_rule, rule_names
 from repro.core.types import Optimizer, PyTree, Schedule, map_with_path
 
 # parameter path fragments always handled by AdamW regardless of rank
@@ -58,14 +63,20 @@ class MixedState(NamedTuple):
 class FusedMixedState(NamedTuple):
     """State for the shape-bucketed fused path: matrix momentum lives stacked
     per bucket; the per-leaf trees keep (1,)*ndim placeholders on matrix
-    leaves so their structure still mirrors ``params`` (simple sharding)."""
+    leaves so their structure still mirrors ``params`` (simple sharding).
+    ``slots`` carries the rule's extra per-bucket stripes (e.g. NorMuon's
+    neuron-wise second moment) in the same slot-major layout as
+    ``engine.BucketedState`` — its top-level field name is what
+    ``distributed.sharding.bucket_specs`` keys ZeRO sharding on, so every
+    family member shares one checkpoint / reshard / dp-step path."""
     momentum: PyTree               # AdamW first moment (placeholders on matrix leaves)
     nu: PyTree                     # AdamW second moment (ditto)
     buckets: Dict[str, jax.Array]  # stacked matrix momentum, one per shape bucket
+    slots: Dict[str, Dict[str, jax.Array]] = {}  # rule stripes: slot -> bucket key
 
 
 def mixed_optimizer(
-    matrix_kind: str,                      # "rmnp" | "muon" | "adamw"
+    matrix_kind: str,                      # any rules.rule_names() | "adamw"
     lr_matrix: Schedule,
     lr_adamw: Schedule,
     beta: float = 0.95,
@@ -82,16 +93,21 @@ def mixed_optimizer(
     shard_axis: Optional[str] = None,
     shard_size: int = 1,
 ) -> Optimizer:
-    """Build the paper's mixed optimizer.  ``matrix_kind='adamw'`` degrades to
-    plain AdamW on everything (the paper's AdamW baseline).
+    """Build the paper's mixed optimizer.  ``matrix_kind`` is any registered
+    matrix update rule (``rules.rule_names()``: rmnp, muon, normuon, muown,
+    nora) or ``'adamw'``, which degrades to plain AdamW on everything (the
+    paper's AdamW baseline).
 
     ``fused=True`` routes the matrix partition through the shape-bucketed
-    engine (core/bucketing.py): one preconditioner pass per distinct
-    ``(d_in, d_out)`` bucket — via the Pallas kernel when ``use_kernel`` is
-    set, else a single XLA row-normalize per bucket.  Requires
-    ``matrix_kind`` in ('rmnp', 'adamw'); Muon's Newton-Schulz stays
-    per-leaf.  ``momentum_dtype`` ('float32' | 'bfloat16') sets the fused
-    matrix-momentum storage dtype (math is always fp32).
+    engine (core/engine.py): one preconditioner pass per distinct
+    ``(d_in, d_out)`` bucket — the RMNP family runs its fused Pallas stripes
+    when ``use_kernel`` is set, the NS family batches Newton-Schulz over the
+    bucket's stacked ``L`` axis (one 3-launch sequence per bucket instead of
+    one per leaf).  Rules beyond rmnp/muon carry extra per-bucket state
+    stripes or a non-additive apply, which exist only in the bucketed
+    layout, so they imply ``fused=True``.  ``momentum_dtype``
+    ('float32' | 'bfloat16') sets the fused matrix-momentum storage dtype
+    (math is always fp32).
 
     ``fused_apply=True`` (implies ``fused``) exposes
     ``Optimizer.update_apply``: matrix buckets fold the weight update into
@@ -106,8 +122,10 @@ def mixed_optimizer(
     ``Optimizer.update_apply_sharded`` — the ZeRO-2 entry point taking
     reduce-scattered per-bucket mean-gradient shards (AdamW leaves still
     read their mean grads from the per-leaf tree)."""
-    if matrix_kind not in ("rmnp", "muon", "adamw"):
-        raise ValueError(f"unknown matrix optimizer {matrix_kind!r}")
+    if matrix_kind not in rule_names() + ("adamw",):
+        raise ValueError(
+            f"unknown matrix optimizer {matrix_kind!r}; expected one of "
+            f"{', '.join(rule_names() + ('adamw',))}")
     if shard_size < 1:
         raise ValueError(f"shard_size must be >= 1, got {shard_size}")
     if shard_size > 1 and shard_axis is None:
@@ -117,20 +135,23 @@ def mixed_optimizer(
         fused_apply = True  # sharded state needs the single-pass path
     if fused_apply:
         fused = True  # single-pass apply rides the shape-bucketed engine
-    if fused and matrix_kind == "muon":
-        raise ValueError("fused engine shape-buckets the row-normalize "
-                         "preconditioner; Muon's Newton-Schulz is per-leaf "
-                         "(use fused=False with matrix_kind='muon')")
+    if matrix_kind not in ("rmnp", "muon", "adamw"):
+        fused = True  # slot stripes / non-additive apply are bucketed-only
     b1, b2 = adam_betas
 
     def _is_mat(path, leaf):
         return matrix_kind != "adamw" and is_matrix_param(path, leaf, matrix_embed)
 
     if fused:
+        # adamw buckets nothing (_is_mat is always False -> empty plan), so
+        # any rule works as the engine's placeholder; rmnp is the cheapest
+        rule = make_rule("rmnp" if matrix_kind == "adamw" else matrix_kind,
+                         beta=beta, weight_decay=weight_decay, eps=rn_eps,
+                         ns_steps=ns_steps)
         return _fused_mixed(
-            lr_matrix, lr_adamw, is_mat=_is_mat, beta=beta,
+            rule, lr_matrix, lr_adamw, is_mat=_is_mat,
             weight_decay=weight_decay, b1=b1, b2=b2, adam_eps=adam_eps,
-            rn_eps=rn_eps, use_kernel=use_kernel, momentum_dtype=momentum_dtype,
+            use_kernel=use_kernel, momentum_dtype=momentum_dtype,
             fused_apply=fused_apply, shard_axis=shard_axis,
             shard_size=shard_size)
 
@@ -194,29 +215,25 @@ def momentum_for_diagnostics(opt_state, params, matrix_embed: bool = True) -> Py
     return bucketing.scatter(plan, opt_state.buckets, opt_state.momentum)
 
 
-def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
-                 beta: float, weight_decay: float, b1: float, b2: float,
-                 adam_eps: float, rn_eps: float, use_kernel: bool,
+def _fused_mixed(rule: MatrixUpdateRule, lr_matrix: Schedule,
+                 lr_adamw: Schedule, *, is_mat,
+                 weight_decay: float, b1: float, b2: float,
+                 adam_eps: float, use_kernel: bool,
                  momentum_dtype: str, fused_apply: bool = False,
                  shard_axis: Optional[str] = None,
                  shard_size: int = 1) -> Optimizer:
     """Mixed optimizer with the matrix partition running through the
-    shape-bucketed fused RMNP engine; AdamW leaves stay per-leaf (they are
-    cheap elementwise updates XLA fuses on its own)."""
-    mdtype = jnp.dtype(momentum_dtype)
-    if mdtype not in (jnp.float32, jnp.bfloat16):
-        raise ValueError(f"momentum_dtype must be float32 or bfloat16, "
-                         f"got {momentum_dtype!r}")
-    plans = bucketing.PlanCache()
+    generic bucketed engine under ``rule``; AdamW leaves stay per-leaf
+    (they are cheap elementwise updates XLA fuses on its own)."""
+    from repro.core.engine import BucketedEngine
 
-    def _plan(params) -> bucketing.BucketPlan:
-        return plans.get(
-            bucketing.plan_signature(params),
-            lambda: bucketing.build_plan(params, predicate=is_mat,
-                                         pad_multiple=shard_size))
+    eng = BucketedEngine(rule, lr_matrix, use_kernel=use_kernel,
+                         momentum_dtype=momentum_dtype,
+                         shard_axis=shard_axis, shard_size=shard_size,
+                         predicate=is_mat)
 
     def init(params):
-        plan = _plan(params)
+        bucketed = eng.init_state(eng.plan(params))
         momentum = map_with_path(
             lambda path, p: jnp.zeros(
                 (1,) * p.ndim if is_mat(path, p) else p.shape, jnp.float32),
@@ -226,7 +243,8 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
                 (1,) * p.ndim if is_mat(path, p) else p.shape, jnp.float32),
             params)
         return FusedMixedState(momentum=momentum, nu=nu,
-                               buckets=bucketing.init_buckets(plan, mdtype))
+                               buckets=bucketed.buckets,
+                               slots=bucketed.slots)
 
     def adam_sweep(grads, state, params, step, emit):
         """Shared per-leaf AdamW pass.  ``emit(u, p)`` turns the fp32
@@ -257,24 +275,19 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
         return pick(0), pick(1), pick(2)
 
     def update(grads, state, params, step):
-        plan = _plan(params)
-        eta_m = lr_matrix(step)
+        plan = eng.plan(params)
         updates, momentum, nu = adam_sweep(
             grads, state, params, step,
             emit=lambda u, p: jnp.zeros(p.shape, jnp.float32) if u is None else u)
 
-        # matrix partition: one fused pass per shape bucket
+        # matrix partition: one rule pass per shape bucket
         g_b = bucketing.gather(plan, grads, dtype=jnp.float32)
         p_b = bucketing.gather(plan, params, dtype=jnp.float32)
-        d_b, v_b = bucketing.fused_rownorm_update(
-            plan, g_b, state.buckets, beta=beta, eps=rn_eps,
-            use_kernel=use_kernel)
-        upd_b = {}
-        for bkt in plan.buckets:
-            scale = eta_m * rms_lr_scale((bkt.d_in, bkt.d_out))
-            upd_b[bkt.key] = -scale * (d_b[bkt.key] + weight_decay * p_b[bkt.key])
+        upd_b, v_b, s_b = eng.update_buckets(plan, g_b, p_b, state.buckets,
+                                             state.slots, step)
         updates = bucketing.scatter(plan, upd_b, updates)
-        return updates, FusedMixedState(momentum=momentum, nu=nu, buckets=v_b)
+        return updates, FusedMixedState(momentum=momentum, nu=nu,
+                                        buckets=v_b, slots=s_b)
 
     def update_apply(grads, state, params, step):
         """Single-pass fused apply: -> (new_params, state).  AdamW leaves
@@ -283,40 +296,32 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
         buckets run the fused-apply kernel — gather (g, v, w), one pass,
         scatter the updated weights — with no fp32 ``d`` bucket and no
         updates tree."""
-        plan = _plan(params)
-        eta_m = lr_matrix(step)
+        plan = eng.plan(params)
         new_params, momentum, nu = adam_sweep(
             grads, state, params, step,
             emit=lambda u, p: p if u is None else p + u.astype(p.dtype))
 
-        # matrix partition: one single-pass fused-apply kernel per bucket
+        # matrix partition: one single-pass rule apply per bucket
         g_b = bucketing.gather(plan, grads, dtype=jnp.float32)
         p_b = bucketing.gather(plan, params)
-        w_b, v_b = {}, {}
-        for bkt in plan.buckets:
-            scale = eta_m * rms_lr_scale((bkt.d_in, bkt.d_out))
-            w_b[bkt.key], v_b[bkt.key] = bucketing.bucket_update_apply(
-                bkt, g_b[bkt.key], state.buckets[bkt.key], p_b[bkt.key],
-                scale=scale, weight_decay=weight_decay, beta=beta, eps=rn_eps,
-                use_kernel=use_kernel, shard_axis=shard_axis)
+        w_b, v_b, s_b = eng.apply_buckets(plan, g_b, p_b, state.buckets,
+                                          state.slots, step)
         new_params = bucketing.scatter(plan, w_b, new_params, cast=True)
         return new_params, FusedMixedState(momentum=momentum, nu=nu,
-                                           buckets=v_b)
+                                           buckets=v_b, slots=s_b)
 
     def update_apply_bucket(bucket, g_shard, v_shard, w_chunks, step,
-                            clip_scale=None):
+                            clip_scale=None, *, slots=None):
         """One matrix bucket's whole ZeRO-2 chain — optional clip scale
-        folded into the gradient shard, fused kernel, updated-weight
-        all-gather — independent of every other bucket (the pipelined dp
-        step's per-bucket entry point).  Returns ``(w_new full padded
-        bucket, v_new shard)``."""
-        eta_m = lr_matrix(step)
-        scale = eta_m * rms_lr_scale((bucket.d_in, bucket.d_out))
-        g = g_shard if clip_scale is None else g_shard * clip_scale
-        return bucketing.bucket_update_apply_sharded(
-            bucket, g, v_shard, w_chunks, scale=scale,
-            weight_decay=weight_decay, beta=beta, eps=rn_eps,
-            use_kernel=use_kernel, shard_axis=shard_axis)
+        folded into the gradient shard, the rule's fused apply,
+        updated-weight all-gather — independent of every other bucket (the
+        pipelined dp step's per-bucket entry point).  ``slots`` maps slot
+        name -> this rank's stripe shard (None/{} for slotless rules).
+        Returns ``(w_new full padded bucket, v_new shard, slots_new
+        shard)``."""
+        return eng.bucket_apply_sharded(bucket, g_shard, v_shard,
+                                        slots or {}, w_chunks, step,
+                                        clip_scale)
 
     def update_apply_sharded(g_shards, grads, state, params, step,
                              clip_scale=None):
@@ -330,36 +335,24 @@ def _fused_mixed(lr_matrix: Schedule, lr_adamw: Schedule, *, is_mat,
         ``clip_scale`` folds the global-norm clip into each chain).  Only
         the updated weight slices are all-gathered — no full gradient
         bucket per rank."""
-        plan = _plan(params)
+        plan = eng.plan(params)
         new_params, momentum, nu = adam_sweep(
             grads, state, params, step,
             emit=lambda u, p: p if u is None else p + u.astype(p.dtype))
 
-        n_dev = None
-        for bkt in plan.buckets:
-            n_b = bucketing.shard_count(bkt, state.buckets[bkt.key].shape[0])
-            if n_dev is None:
-                n_dev = n_b
-            elif n_b != n_dev:
-                raise ValueError(
-                    f"inconsistent shard counts across buckets: "
-                    f"{n_dev} vs {n_b} (bucket {bkt.key!r})")
-        if n_dev is None:
+        out = eng.sharded_apply(plan, g_shards, state.buckets, state.slots,
+                                params, step, clip_scale)
+        if out is None:
             return new_params, FusedMixedState(momentum=momentum, nu=nu,
-                                               buckets={})
-        w_chunks = bucketing.gather_chunks(plan, params, n_dev)
-        w_b, v_b = {}, {}
-        for bkt in plan.buckets:
-            w_b[bkt.key], v_b[bkt.key] = update_apply_bucket(
-                bkt, g_shards[bkt.key], state.buckets[bkt.key],
-                w_chunks[bkt.key], step, clip_scale)
+                                               buckets={}, slots={})
+        w_b, v_b, s_b = out
         new_params = bucketing.scatter(plan, w_b, new_params, cast=True)
         return new_params, FusedMixedState(momentum=momentum, nu=nu,
-                                           buckets=v_b)
+                                           buckets=v_b, slots=s_b)
 
     zero2 = fused_apply and shard_axis is not None
     return Optimizer(init=init, update=update,
                      update_apply=update_apply if fused_apply else None,
                      update_apply_sharded=update_apply_sharded if zero2 else None,
                      update_apply_bucket=update_apply_bucket if zero2 else None,
-                     bucket_plan=_plan, shard_size=shard_size)
+                     bucket_plan=eng.plan, shard_size=shard_size)

@@ -16,12 +16,11 @@ versus Muon's O(mn * min(m, n)) Newton-Schulz matmuls.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bucketing
 from repro.core.types import Optimizer, PyTree, Schedule
 
 
@@ -41,9 +40,13 @@ class RmnpState(NamedTuple):
     momentum: PyTree
 
 
-class RmnpFusedState(NamedTuple):
-    """Matrix momentum stacked per ``(d_in, d_out)`` shape bucket."""
-    buckets: Dict[str, jax.Array]
+def __getattr__(name):
+    # Back-compat: the stacked-bucket state moved to the generic engine as
+    # the family-wide BucketedState (lazy to keep import order acyclic).
+    if name == "RmnpFusedState":
+        from repro.core.engine import BucketedState
+        return BucketedState
+    raise AttributeError(name)
 
 
 def rmnp(lr: Schedule, beta: float = 0.95, weight_decay: float = 0.1,
@@ -123,109 +126,15 @@ def _rmnp_fused(lr: Schedule, *, beta: float, weight_decay: float, eps: float,
                 fused_apply: bool = False,
                 shard_axis: Optional[str] = None,
                 shard_size: int = 1) -> Optimizer:
-    mdtype = jnp.dtype(momentum_dtype)
-    if mdtype not in (jnp.float32, jnp.bfloat16):
-        raise ValueError(f"momentum_dtype must be float32 or bfloat16, "
-                         f"got {momentum_dtype!r}")
-    # leaf->bucket plan: static metadata, computed once at init and reused by
-    # every update trace (keyed on the leaf paths/shapes so one optimizer can
-    # serve several models; bounded LRU so a long-lived process cycling many
-    # signatures does not leak plan metadata)
-    plans = bucketing.PlanCache()
+    """The shape-bucketed RMNP optimizer is the generic bucketed engine
+    (core/engine.py) instantiated with the RMNP rule — the historical
+    behavior (plan caching, fused Pallas apply, ZeRO-1/2 entry points) now
+    lives there, shared with the whole update-rule family."""
+    from repro.core.engine import matrix_optimizer
+    from repro.core.rules import RmnpRule
 
-    def _plan(params) -> bucketing.BucketPlan:
-        return plans.get(
-            bucketing.plan_signature(params),
-            lambda: bucketing.build_plan(params, strict=True,
-                                         pad_multiple=shard_size))
-
-    def init(params):
-        return RmnpFusedState(buckets=bucketing.init_buckets(_plan(params), mdtype))
-
-    def update(grads, state, params, step):
-        plan = _plan(params)
-        eta = lr(step)
-        g_b = bucketing.gather(plan, grads, dtype=jnp.float32)
-        p_b = bucketing.gather(plan, params, dtype=jnp.float32)
-        d_b, v_b = bucketing.fused_rownorm_update(
-            plan, g_b, state.buckets, beta=beta, eps=eps, use_kernel=use_kernel)
-        upd_b = {}
-        for b in plan.buckets:
-            scale = eta * rms_lr_scale((b.d_in, b.d_out))
-            upd_b[b.key] = -scale * (d_b[b.key] + weight_decay * p_b[b.key])
-        updates = bucketing.scatter(plan, upd_b, params)
-        return updates, RmnpFusedState(buckets=v_b)
-
-    def update_apply(grads, state, params, step):
-        """Single-pass fused apply: (grads, state, params, step) ->
-        (new_params, state).  Params are gathered per bucket in their native
-        dtype, updated in one kernel pass, and scattered back — the fp32
-        ``d`` bucket and the updates tree never exist."""
-        plan = _plan(params)
-        eta = lr(step)
-        g_b = bucketing.gather(plan, grads, dtype=jnp.float32)
-        p_b = bucketing.gather(plan, params)
-        w_b, v_b = {}, {}
-        for b in plan.buckets:
-            scale = eta * rms_lr_scale((b.d_in, b.d_out))
-            w_b[b.key], v_b[b.key] = bucketing.bucket_update_apply(
-                b, g_b[b.key], state.buckets[b.key], p_b[b.key],
-                scale=scale, weight_decay=weight_decay, beta=beta, eps=eps,
-                use_kernel=use_kernel, shard_axis=shard_axis)
-        new_params = bucketing.scatter(plan, w_b, params, cast=True)
-        return new_params, RmnpFusedState(buckets=v_b)
-
-    def update_apply_bucket(bucket, g_shard, v_shard, w_chunks, step,
-                            clip_scale=None):
-        """One bucket's whole ZeRO-2 chain — optional clip scale folded into
-        the gradient shard, fused kernel, updated-weight all-gather — with
-        no dependence on any other bucket (the pipelined dp step's per-bucket
-        entry point).  Returns ``(w_new full padded bucket, v_new shard)``."""
-        eta = lr(step)
-        scale = eta * rms_lr_scale((bucket.d_in, bucket.d_out))
-        g = g_shard if clip_scale is None else g_shard * clip_scale
-        return bucketing.bucket_update_apply_sharded(
-            bucket, g, v_shard, w_chunks, scale=scale,
-            weight_decay=weight_decay, beta=beta, eps=eps,
-            use_kernel=use_kernel, shard_axis=shard_axis)
-
-    def update_apply_sharded(g_shards, grads, state, params, step,
-                             clip_scale=None):
-        """ZeRO-2 single-pass apply (call inside ``shard_map``):
-        ``g_shards`` maps bucket key -> this rank's reduce-scattered
-        ``(padded L / N, d_in, d_out)`` fp32 mean-gradient shard; ``grads``
-        is unused (pure-matrix optimizer).  A loop over
-        ``update_apply_bucket`` — each bucket's chain is independent, so the
-        scheduler can overlap one bucket's all-gather with another's kernel.
-        ``clip_scale`` (optional traced scalar) folds the global-norm clip
-        into each chain instead of pre-scaling the shards."""
-        del grads
-        plan = _plan(params)
-        n_dev = None
-        for b in plan.buckets:
-            n_b = bucketing.shard_count(b, state.buckets[b.key].shape[0])
-            if n_dev is None:
-                n_dev = n_b
-            elif n_b != n_dev:
-                raise ValueError(
-                    f"inconsistent shard counts across buckets: "
-                    f"{n_dev} vs {n_b} (bucket {b.key!r})")
-        if n_dev is None:
-            return params, state
-        w_chunks = bucketing.gather_chunks(plan, params, n_dev)
-        w_b, v_b = {}, {}
-        for b in plan.buckets:
-            w_b[b.key], v_b[b.key] = update_apply_bucket(
-                b, g_shards[b.key], state.buckets[b.key], w_chunks[b.key],
-                step, clip_scale)
-        new_params = bucketing.scatter(plan, w_b, params, cast=True)
-        return new_params, RmnpFusedState(buckets=v_b)
-
-    # ZeRO-2 needs a shard axis; shard_size=1 (degenerate 1-way axis) still
-    # works — chunking and the collectives are identities there.
-    zero2 = fused_apply and shard_axis is not None
-    return Optimizer(init=init, update=update,
-                     update_apply=update_apply if fused_apply else None,
-                     update_apply_sharded=update_apply_sharded if zero2 else None,
-                     update_apply_bucket=update_apply_bucket if zero2 else None,
-                     bucket_plan=_plan, shard_size=shard_size)
+    return matrix_optimizer(
+        RmnpRule(beta=beta, weight_decay=weight_decay, eps=eps), lr,
+        use_kernel=use_kernel, momentum_dtype=momentum_dtype,
+        fused_apply=fused_apply, shard_axis=shard_axis,
+        shard_size=shard_size)

@@ -40,9 +40,12 @@ class Optimizer:
     # shard_axis + shard_size.
     update_apply_sharded: Optional[Callable[..., Any]] = None
     # per-bucket ZeRO-2 entry point: (bucket, g_shard, v_shard, w_chunks,
-    # step, clip_scale) -> (w_new full padded bucket, v_new shard).  One
-    # bucket's whole chain — clip scale, fused kernel, updated-weight
-    # all-gather — with no dependence on any other bucket.
+    # step, clip_scale=None, *, slots=None) -> (w_new full padded bucket,
+    # v_new shard, slots_new shard).  ``slots`` maps slot name -> this
+    # rank's stripe shard of the rule's extra per-bucket state (None/{} for
+    # slotless rules like RMNP/Muon).  One bucket's whole chain — clip
+    # scale, the rule's fused apply, updated-weight all-gather — with no
+    # dependence on any other bucket.
     # ``update_apply_sharded`` IS a loop over this plus the non-matrix
     # sweep (the pipelined dp step enters through it); the per-bucket form
     # is public for steps that need to drive buckets individually, e.g.

@@ -134,12 +134,14 @@ def bucket_specs(opt_state, mesh: Mesh, rules: Optional[dict] = None):
     from repro.core.types import map_with_path
 
     def visit(path, leaf):
-        # only the state's top-level `buckets` field holds stacked momentum;
-        # a *parameter* path containing 'buckets' (under momentum/nu) must
-        # not match.  NamedTuple fields render as '.buckets' or 'buckets'
-        # depending on the jax key type, so strip the leading dot.
+        # only the state's top-level `buckets` field holds stacked momentum
+        # (and `slots` the rules' extra (L, 1, d_out) stripes, which shard
+        # identically); a *parameter* path containing 'buckets' (under
+        # momentum/nu) must not match.  NamedTuple fields render as
+        # '.buckets' or 'buckets' depending on the jax key type, so strip
+        # the leading dot.
         head = path.split("/", 1)[0].lstrip(".")
-        if head == "buckets" and getattr(leaf, "ndim", 0) == 3:
+        if head in ("buckets", "slots") and getattr(leaf, "ndim", 0) == 3:
             return spec_for(leaf.shape, ("bucket", None, None), mesh, rules)
         return P()
 

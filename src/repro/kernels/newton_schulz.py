@@ -7,6 +7,10 @@ baseline's O(mn * min(m,n)) hot loop, built on the tiled matmul kernel:
 
 Kept as three kernel launches (Gram, polynomial, apply): the Gram result is
 reused twice, so fusing further would re-stream it from HBM anyway.
+
+``ns_step3`` is the batched form for a stacked ``(L, m, n)`` shape bucket:
+the same three-launch pipeline on the batched matmul kernel, so a whole
+bucket costs one launch sequence instead of one per matrix.
 """
 from __future__ import annotations
 
@@ -16,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.matmul import matmul
+from repro.kernels.matmul import matmul, matmul3
 
 
 def _poly_kernel(g_ref, gg_ref, o_ref, *, b: float, c: float):
@@ -40,3 +44,27 @@ def ns_step(x, a: float, b: float, c: float, interpret: bool = False):
         interpret=interpret,
     )(g, gg)
     return a * x + matmul(poly, x, interpret=interpret)
+
+
+def _poly_kernel3(g_ref, gg_ref, o_ref, *, b: float, c: float):
+    o_ref[0] = b * g_ref[0] + c * gg_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("a", "b", "c", "interpret"))
+def ns_step3(x, a: float, b: float, c: float, interpret: bool = False):
+    """Batched x: (L, m, n) fp32, m <= n assumed by the caller."""
+    L, m, n = x.shape
+    xt = jnp.swapaxes(x, -1, -2)
+    g = matmul3(x, xt, interpret=interpret)            # (L, m, m)
+    gg = matmul3(g, g, interpret=interpret)            # (L, m, m)
+    bm = min(256, m) if m % min(256, m) == 0 else m
+    poly = pl.pallas_call(
+        functools.partial(_poly_kernel3, b=b, c=c),
+        grid=(L, max(1, m // bm)),
+        in_specs=[pl.BlockSpec((1, bm, m), lambda l, i: (l, i, 0)),
+                  pl.BlockSpec((1, bm, m), lambda l, i: (l, i, 0))],
+        out_specs=pl.BlockSpec((1, bm, m), lambda l, i: (l, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, m, m), jnp.float32),
+        interpret=interpret,
+    )(g, gg)
+    return a * x + matmul3(poly, x, interpret=interpret)

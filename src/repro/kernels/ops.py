@@ -6,8 +6,6 @@ Leading batch dims (layer stacks, expert stacks) are vmapped.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -129,14 +127,15 @@ def count_buffer_eqns(fn, shape, dtype, *args, exclude_prims=(),
 
 
 def ns_step(x, a: float, b: float, c: float):
-    """One Newton-Schulz iteration on (..., m, n) fp32 (leading dims mapped
-    sequentially — NS already saturates the MXU per matrix)."""
-    fn = functools.partial(_ns.ns_step, a=a, b=b, c=c, interpret=_interpret())
+    """One Newton-Schulz iteration on (..., m, n) fp32.  Leading dims are
+    batched through the stacked-bucket kernel: a whole ``(L, m, n)`` shape
+    bucket costs one 3-launch sequence (Gram, polynomial, apply) instead of
+    one per matrix — the bucketed-Muon analogue of ``rmnp_bucket_update``."""
     if x.ndim == 2:
-        return fn(x)
+        return _ns.ns_step(x, a=a, b=b, c=c, interpret=_interpret())
     lead = x.shape[:-2]
     flat = x.reshape((-1,) + x.shape[-2:])
-    out = jax.lax.map(fn, flat)
+    out = _ns.ns_step3(flat, a=a, b=b, c=c, interpret=_interpret())
     return out.reshape(lead + x.shape[-2:])
 
 

@@ -13,14 +13,17 @@ from __future__ import annotations
 import argparse
 import json
 import time
+import warnings
 from pathlib import Path
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
-from repro.core import cosine_with_warmup, global_dominance, mixed_optimizer
+from repro.core import (cosine_with_warmup, global_dominance, make_optimizer,
+                        optimizer_names)
 from repro.data.pipeline import make_stream
 from repro.distributed.sharding import axis_rules
 from repro.launch.mesh import make_local_mesh
@@ -36,7 +39,8 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
           use_kernel: bool = False, fused: bool = False,
           momentum_dtype: str = "float32", fused_apply: bool = False,
           zero2: bool = False, compress: bool = True, accum: int = 1,
-          overlap: bool = True, log_file: str = "", stop_at: int = 0):
+          overlap: Optional[bool] = None, log_file: str = "",
+          stop_at: int = 0):
     """``stop_at`` simulates a crash: train to that step (schedules still
     span ``steps``) and exit WITHOUT the final checkpoint.
 
@@ -54,17 +58,17 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
     the matrix grads accumulate directly in the chunked per-rank layout);
     ``overlap`` picks the bucket-pipelined ZeRO-2 schedule (independent
     per-bucket reduce-scatter/update chains, two-phase clip) over the
-    serialized baseline."""
+    serialized baseline — ``None`` (default) auto-resolves via
+    ``train.dp_step.resolve_overlap``."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
 
     mesh = make_local_mesh(data=len(jax.devices()))
     n_dev = mesh.shape["data"]
-    opt = mixed_optimizer(
-        optimizer,
-        cosine_with_warmup(lr_matrix, steps),
-        cosine_with_warmup(lr_adamw, steps),
+    opt = make_optimizer(optimizer, dict(
+        lr_matrix=cosine_with_warmup(lr_matrix, steps),
+        lr_adamw=cosine_with_warmup(lr_adamw, steps),
         matrix_embed=matrix_embed,
         use_kernel=use_kernel,
         fused=fused,
@@ -72,7 +76,7 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
         fused_apply=fused_apply or zero2,
         shard_axis="data" if zero2 else None,
         shard_size=n_dev if zero2 else 1,
-    )
+    ))
 
     params = init_params(cfg, jax.random.PRNGKey(seed))
     opt_state = opt.init(params)
@@ -133,7 +137,7 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
                 m["step"] = step
                 m["wall_s"] = round(time.time() - t0, 2)
                 if dominance_every and step % dominance_every == 0 and \
-                        optimizer in ("rmnp", "muon"):
+                        optimizer != "adamw":
                     from repro.core.mixed import momentum_for_diagnostics
                     dom = global_dominance(momentum_for_diagnostics(
                         opt_state, params, matrix_embed=matrix_embed))
@@ -163,7 +167,10 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--optimizer", default="rmnp", choices=["rmnp", "muon", "adamw"])
+    ap.add_argument("--optimizer", default="rmnp",
+                    choices=list(optimizer_names()),
+                    help="matrix update rule (everything else gets AdamW); "
+                         "'adamw' is the everything-through-AdamW baseline")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -176,16 +183,21 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--dominance-every", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true")
-    ap.add_argument("--fused", action="store_true",
-                    help="shape-bucketed fused update engine: one "
-                         "preconditioner pass per distinct matrix shape")
+    ap.add_argument("--engine", default=None,
+                    choices=["per-leaf", "bucketed", "single-pass"],
+                    help="matrix-partition engine: 'per-leaf' (one "
+                         "preconditioner pass per parameter), 'bucketed' "
+                         "(shape-bucketed: one pass per distinct matrix "
+                         "shape), 'single-pass' (bucketed with the weight "
+                         "apply folded into the per-bucket pass — no fp32 "
+                         "d buffer, no separate apply_updates sweep)")
     ap.add_argument("--momentum-dtype", default="float32",
                     choices=["float32", "bfloat16"],
-                    help="fused matrix-momentum storage dtype")
+                    help="bucketed matrix-momentum storage dtype")
+    ap.add_argument("--fused", action="store_true",
+                    help="DEPRECATED alias for --engine bucketed")
     ap.add_argument("--fused-apply", action="store_true",
-                    help="single-pass update: fold the weight apply into "
-                         "the per-bucket RMNP kernel (implies --fused; no "
-                         "fp32 d buffer, no separate apply_updates pass)")
+                    help="DEPRECATED alias for --engine single-pass")
     ap.add_argument("--zero2", action="store_true",
                     help="explicit data-parallel step with ZeRO-2 sharding "
                          "(implies --fused-apply): matrix momentum AND "
@@ -202,26 +214,47 @@ def main():
                          "matrix grads accumulate directly in the chunked "
                          "per-destination-rank layout — the monolithic fp32 "
                          "gradient bucket never exists)")
-    ap.add_argument("--no-overlap", action="store_true",
-                    help="with --zero2: serialized all-reduce-then-all-"
-                         "update schedule instead of the bucket-pipelined "
+    ap.add_argument("--overlap", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="with --zero2: 'on' forces the bucket-pipelined "
                          "step (independent per-bucket collective/update "
-                         "chains, two-phase global-norm clip)")
+                         "chains, two-phase global-norm clip), 'off' the "
+                         "serialized all-reduce-then-all-update baseline; "
+                         "'auto' (default) pipelines except the measured "
+                         "accum=1 fp32-wire regression case")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="DEPRECATED alias for --overlap off")
     ap.add_argument("--no-matrix-embed", action="store_true",
                     help="AdamW on LM-head/embeddings (paper App D.4 ablation)")
     ap.add_argument("--stop-at", type=int, default=0,
                     help="simulate a crash at this step (schedules span --steps)")
     ap.add_argument("--log-file", default="")
     args = ap.parse_args()
+    engine = args.engine
+    if args.fused or args.fused_apply:
+        alias = "--fused-apply" if args.fused_apply else "--fused"
+        mapped = "single-pass" if args.fused_apply else "bucketed"
+        warnings.warn(f"{alias} is deprecated; use --engine {mapped}",
+                      DeprecationWarning, stacklevel=2)
+        if engine is None:
+            engine = mapped
+    engine = engine or "per-leaf"
+    overlap = {"auto": None, "on": True, "off": False}[args.overlap]
+    if args.no_overlap:
+        warnings.warn("--no-overlap is deprecated; use --overlap off",
+                      DeprecationWarning, stacklevel=2)
+        overlap = False
     train(args.arch, args.optimizer, args.steps, args.batch, args.seq,
           args.lr_matrix, args.lr_adamw, reduced=not args.full,
           seed=args.seed, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
           log_every=args.log_every, dominance_every=args.dominance_every,
           matrix_embed=not args.no_matrix_embed,
-          use_kernel=args.use_kernel, fused=args.fused,
-          momentum_dtype=args.momentum_dtype, fused_apply=args.fused_apply,
+          use_kernel=args.use_kernel,
+          fused=engine in ("bucketed", "single-pass"),
+          momentum_dtype=args.momentum_dtype,
+          fused_apply=engine == "single-pass",
           zero2=args.zero2, compress=not args.no_compress,
-          accum=args.accum, overlap=not args.no_overlap,
+          accum=args.accum, overlap=overlap,
           log_file=args.log_file, stop_at=args.stop_at)
 
 

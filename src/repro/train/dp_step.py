@@ -36,16 +36,23 @@ Two knobs control the ZeRO-2 schedule (train/pipeline.py):
   backward as a ``lax.scan``, accumulating matrix gradients directly in
   the chunked per-destination-rank layout — the monolithic fp32 gradient
   bucket never exists even while accumulating.
-* ``overlap=True`` (the default) issues each bucket's reduce-scatter and
-  each bucket's fused update as independent per-bucket chains with the
-  global-norm clip reduced to a single psum'd scalar folded into every
-  bucket's update (two-phase clip) — no scaled-shard buffers or cross-
-  bucket data dependence between the collectives and the updates, so
-  XLA's latency-hiding scheduler can overlap them.  ``overlap=False``
-  keeps the serialized all-reduce-then-all-update order (the benchmark
-  baseline; per-leaf fp32 accumulation, pre-scaled gradient shards).
+* ``overlap`` issues each bucket's reduce-scatter and each bucket's fused
+  update as independent per-bucket chains with the global-norm clip
+  reduced to a single psum'd scalar folded into every bucket's update
+  (two-phase clip) — no scaled-shard buffers or cross-bucket data
+  dependence between the collectives and the updates, so XLA's
+  latency-hiding scheduler can overlap them.  ``overlap=False`` keeps the
+  serialized all-reduce-then-all-update order (the benchmark baseline;
+  per-leaf fp32 accumulation, pre-scaled gradient shards).  The default
+  (``overlap=None``) resolves automatically via :func:`resolve_overlap`:
+  pipelined everywhere except ``accum == 1`` with the exact fp32
+  collectives, the one measured configuration where the pipelined
+  schedule regresses (BENCH_overlap: the scan-free backward leaves no
+  compute to hide the chunked layout's extra reshapes behind, 0.70x).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -63,11 +70,23 @@ from repro.distributed.sharding import bucket_specs
 from repro.train import pipeline
 
 
+def resolve_overlap(overlap: Optional[bool], *, accum: int,
+                    compress: bool) -> bool:
+    """Resolve the tri-state ``overlap`` knob.  Explicit True/False wins;
+    None picks the pipelined schedule except in the one measured regression
+    case — ``accum == 1`` with exact fp32 collectives, where the backward
+    is scan-free and there is no accumulation compute to hide the chunked
+    layout's extra reshapes behind (BENCH_overlap: 0.70x vs serialized)."""
+    if overlap is not None:
+        return overlap
+    return not (accum == 1 and not compress)
+
+
 def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                        *, axis_name: str = "data", clip_norm: float = 1.0,
                        compress: bool = True, remat: str = "none",
                        shard_state: bool = False, zero2: bool = False,
-                       accum: int = 1, overlap: bool = True,
+                       accum: int = 1, overlap: Optional[bool] = None,
                        opt_state: PyTree = None):
     """(params, opt_state, comp_state, batch, step) -> (params, opt_state,
     comp_state, metrics).  Batch is sharded along ``axis_name``; params
@@ -81,8 +100,10 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
     (padded buckets + ``update_apply_sharded``).  ``accum`` splits the
     local batch into that many microbatches (scan accumulation);
     ``overlap`` picks the bucket-pipelined ZeRO-2 schedule over the
-    serialized baseline (no effect off the ZeRO-2 path)."""
+    serialized baseline (no effect off the ZeRO-2 path) — None (default)
+    auto-resolves via :func:`resolve_overlap`."""
     n_dev = mesh.shape[axis_name]
+    overlap = resolve_overlap(overlap, accum=accum, compress=compress)
     if zero2:
         shard_state = True
     if accum < 1:

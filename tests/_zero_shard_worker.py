@@ -27,6 +27,12 @@ is why this cannot run in the main pytest process).  Exercises:
     gradient bucket still never materializes with ``accum=4``, and
     ``collective_overlap_report`` finds zero cross-bucket serialization
     edges in the compiled HLO (fp32 and int8 schedules);
+  * every registered matrix update rule (rmnp, muon, normuon, muown, nora)
+    through the generic bucketed engine: two consecutive ZeRO-2 steps on
+    the 4-way mesh — momentum AND slot stripes sharded — bitwise equal to
+    the per-leaf reference optimizer (core/rules.py), pad slices zero in
+    momentum and every slot, and each rule's pipelined dp step compiling
+    with zero cross-bucket serialization edges;
   * the two-phase clip on a synthetic tree whose leaves are each contained
     in one rank's chunk: with the clip ACTIVE, ``grad_norm`` and the clip
     scale are bit-for-bit the replicated ``clip_by_global_norm``'s.
@@ -232,7 +238,7 @@ def dp_step_two_way_zero2():
 
     step_z2 = jax.jit(make_dp_train_step(
         cfg, opt_z2, mesh, zero2=True, opt_state=st_z2, compress=False,
-        clip_norm=1e6))
+        clip_norm=1e6, overlap=True))
     step_rep = jax.jit(make_dp_train_step(cfg, opt_rep, mesh, compress=False,
                                           clip_norm=1e6))
     p1, s1, _, m1 = step_z2(params, st_z2, comp, batch, jnp.int32(0))
@@ -257,7 +263,7 @@ def dp_step_two_way_zero2():
     st_tr = jax.eval_shape(opt_tr.init, params)
     step_tr = make_dp_train_step(cfg, opt_tr, mesh, zero2=True,
                                  opt_state=st_tr, compress=False,
-                                 clip_norm=1e6)
+                                 clip_norm=1e6, overlap=True)
     abstract = jax.tree_util.tree_map(
         lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
         (params, comp, batch))
@@ -318,7 +324,7 @@ def dp_step_pipelined_four_way():
     # (per-rank partials over each leaf's slices, one psum)
     p1, _, _, m1 = run(make_dp_train_step(
         cfg, opt, mesh, zero2=True, opt_state=st, compress=False,
-        clip_norm=1e6), st)
+        clip_norm=1e6, overlap=True), st)
     p_rep, _, _, m_rep = run(make_dp_train_step(
         cfg, opt_rep, mesh, compress=False, clip_norm=1e6),
         opt_rep.init(params))
@@ -336,7 +342,7 @@ def dp_step_pipelined_four_way():
     # of the microbatch sums is the only difference)
     p4, _, _, _ = run(make_dp_train_step(
         cfg, opt, mesh, zero2=True, opt_state=st, compress=False,
-        clip_norm=1e6, accum=4), st)
+        clip_norm=1e6, accum=4, overlap=True), st)
     p4s, _, _, _ = run(make_dp_train_step(
         cfg, opt, mesh, zero2=True, opt_state=st, compress=False,
         clip_norm=1e6, accum=4, overlap=False), st)
@@ -353,7 +359,8 @@ def dp_step_pipelined_four_way():
     # compressed pipelined accum=4 == compressed serialized accum=4 bitwise
     # (the int8 error-feedback fold in chunked layout is exact), and trains
     pc, sc, cc, mc = run(make_dp_train_step(
-        cfg, opt, mesh, zero2=True, opt_state=st, compress=True, accum=4), st)
+        cfg, opt, mesh, zero2=True, opt_state=st, compress=True, accum=4,
+        overlap=True), st)
     pcs, _, _, _ = run(make_dp_train_step(
         cfg, opt, mesh, zero2=True, opt_state=st, compress=True, accum=4,
         overlap=False), st)
@@ -370,7 +377,8 @@ def dp_step_pipelined_four_way():
         (params, comp, batch))
     plan = opt.bucket_plan(params)
     step_tr = make_dp_train_step(cfg, opt, mesh, zero2=True, opt_state=st_tr,
-                                 compress=False, clip_norm=1e6, accum=4)
+                                 compress=False, clip_norm=1e6, accum=4,
+                                 overlap=True)
     for b in plan.buckets:
         if any(e.shape == (b.padded, b.d_in, b.d_out) for e in b.entries):
             continue  # leaf shape collides with the bucket shape
@@ -387,7 +395,7 @@ def dp_step_pipelined_four_way():
     for compress in (False, True):
         step = make_dp_train_step(cfg, opt, mesh, zero2=True,
                                   opt_state=st_tr, compress=compress,
-                                  accum=4)
+                                  accum=4, overlap=True)
         hlo = jax.jit(step).lower(abstract[0], st_tr, abstract[1],
                                   abstract[2], jnp.int32(0)).compile().as_text()
         rep = collective_overlap_report(hlo, bks)
@@ -397,6 +405,108 @@ def dp_step_pipelined_four_way():
     print("dp 4-way pipelined: OK (accum=1 bitwise vs replicated incl "
           "grad_norm, accum=4 bitwise vs serialized, no fp32 grad bucket, "
           "0 serialization edges)")
+
+
+def rule_family_four_way():
+    """Every registered matrix update rule (rmnp, muon, normuon, muown,
+    nora) through the generic bucketed engine on the ZeRO-2 4-way mesh:
+    two consecutive ``update_apply_sharded`` steps — momentum AND slot
+    stripes sharded, reduce-scattered gradient shards, bias corrections
+    stepping — are bitwise the per-leaf reference optimizer
+    (core/rules.py ``per_leaf_reference``), and pad slices stay
+    identically zero in the momentum and in every slot."""
+    from repro.core.engine import matrix_optimizer
+    from repro.core.rules import make_rule, per_leaf_reference, rule_names
+
+    mesh = jax.make_mesh((4,), ("data",))
+    params, grads0, grads1 = make(0), make(1), make(2)
+    sizes = None
+    for name in rule_names():
+        rule = make_rule(name, beta=0.9, ns_steps=2)
+        opt_sh = matrix_optimizer(rule, constant(0.1), fused_apply=True,
+                                  shard_axis="data", shard_size=4)
+        ref = per_leaf_reference(rule, constant(0.1))
+        state = opt_sh.init(params)
+        sizes = sizes or {b.key: b.size
+                          for b in opt_sh.bucket_plan(params).buckets}
+        sspec = bucket_specs(state, mesh)
+        assert all(s[0] == "data" for s in sspec.buckets.values()), (
+            name, sspec.buckets)
+        for slot, per_bucket in sspec.slots.items():
+            # slot stripes shard their leading L exactly like the momentum
+            assert all(s[0] == "data" for s in per_bucket.values()), (
+                name, slot, per_bucket)
+
+        def z2(g, s, p, step, opt_sh=opt_sh):
+            plan = opt_sh.bucket_plan(p)
+            chunks = bucketing.gather_chunks(plan, g, 4, dtype=jnp.float32)
+            shards = {b.key: exact_reduce_scatter(chunks[b.key], "data")
+                      for b in plan.buckets}
+            return opt_sh.update_apply_sharded(shards, g, s, p, step)
+
+        step_z2 = jax.jit(shard_map(
+            z2, mesh=mesh, in_specs=(P(), sspec, P(), P()),
+            out_specs=(P(), sspec), check_rep=False))
+        p1, s1 = step_z2(grads0, state, params, jnp.int32(0))
+        p2, s2 = step_z2(grads1, s1, p1, jnp.int32(1))
+
+        r1, sr1 = jax.jit(ref.update_apply)(grads0, ref.init(params),
+                                            params, jnp.int32(0))
+        r2, _ = jax.jit(ref.update_apply)(grads1, sr1, r1, jnp.int32(1))
+        for tag, got, want in (("step0", p1, r1), ("step1", p2, r2)):
+            for k in want:
+                np.testing.assert_array_equal(
+                    np.asarray(got[k]), np.asarray(want[k]),
+                    err_msg=f"{name} {tag}: sharded != per-leaf ref: {k}")
+        for k, (padded, per_rank) in PADDED.items():
+            assert s2.buckets[k].shape[0] == padded, (name, k)
+            shard = s2.buckets[k].addressable_shards[0].data
+            assert shard.shape[0] == per_rank, (name, k, shard.shape)
+            assert np.all(np.asarray(s2.buckets[k])[sizes[k]:] == 0), (name, k)
+            for slot, per_bucket in s2.slots.items():
+                assert per_bucket[k].shape[0] == padded, (name, slot, k)
+                assert np.all(np.asarray(per_bucket[k])[sizes[k]:] == 0), (
+                    name, slot, k)
+    print("rule family 4-way: OK (all rules bitwise vs per-leaf refs over "
+          "2 steps, slots sharded, pad slices zero)")
+
+
+def rule_family_overlap_report():
+    """Every rule's pipelined ZeRO-2 dp step compiles with zero
+    cross-bucket serialization edges — the NS family's batched multi-launch
+    transform and the slot-carrying rules inherit the per-bucket
+    independence unchanged (rmnp is covered by dp_step_pipelined_four_way)."""
+    from repro.configs import get_config
+    from repro.launch.hlo_cost import collective_overlap_report
+    from repro.models import init_params
+    from repro.train.dp_step import init_dp_state, make_dp_train_step
+
+    mesh = jax.make_mesh((4,), ("data",))
+    cfg = get_config("gpt2-60m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (16, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    comp = init_dp_state(params)
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+        (params, comp, batch))
+
+    for name in ("muon", "normuon", "muown", "nora"):
+        opt = mixed_optimizer(name, constant(1e-2), constant(1e-2),
+                              shard_axis="data", shard_size=4, ns_steps=1)
+        st = jax.eval_shape(opt.init, params)
+        plan = opt.bucket_plan(params)
+        bks = [(b.key, b.d_in, b.d_out) for b in plan.buckets]
+        step = make_dp_train_step(cfg, opt, mesh, zero2=True, opt_state=st,
+                                  compress=False, overlap=True)
+        hlo = jax.jit(step).lower(abstract[0], st, abstract[1], abstract[2],
+                                  jnp.int32(0)).compile().as_text()
+        rep = collective_overlap_report(hlo, bks)
+        assert rep["collectives"], (name, "no gradient collectives in HLO")
+        assert rep["n_serialization_edges"] == 0, (
+            name, rep["serialization_edges"])
+    print("rule family overlap: OK (0 serialization edges for muon, "
+          "normuon, muown, nora)")
 
 
 def dp_step_shard_size_mismatch():
@@ -477,6 +587,8 @@ if __name__ == "__main__":
     dp_step_two_way()
     dp_step_two_way_zero2()
     dp_step_pipelined_four_way()
+    rule_family_four_way()
+    rule_family_overlap_report()
     dp_step_shard_size_mismatch()
     two_phase_clip_bitwise()
     print("ZERO_SHARD_OK")

@@ -225,9 +225,20 @@ class TestLaunchCounts:
             mixed_optimizer("rmnp", constant(0.1), constant(0.05), fused=True),
             params) == 0                                # XLA fallback: no pallas
 
-    def test_muon_fused_rejected(self):
-        with pytest.raises(ValueError, match="per-leaf"):
-            mixed_optimizer("muon", constant(0.1), constant(0.05), fused=True)
+    def test_muon_fused_batches_ns_over_buckets(self):
+        """Fused Muon batches Newton-Schulz over each bucket's stacked L
+        axis: launches scale with the bucket count (4 launches per NS
+        iteration per bucket — Gram, G@G, polynomial, apply), not the leaf
+        count."""
+        shapes = dict(RAGGED_SHAPES, norm=(8,), bias=(16,))
+        params = make_tree(shapes)
+        fused = mixed_optimizer("muon", constant(0.1), constant(0.05),
+                                use_kernel=True, fused=True, ns_steps=2)
+        leaf = mixed_optimizer("muon", constant(0.1), constant(0.05),
+                               use_kernel=True, ns_steps=2)
+        # RAGGED_SHAPES: 5 matrix leaves in 3 shape buckets
+        assert optimizer_launches(fused, params) == 4 * 2 * 3
+        assert optimizer_launches(leaf, params) == 4 * 2 * 5
 
 
 class TestPickBlockN:

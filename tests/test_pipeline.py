@@ -240,7 +240,7 @@ class TestUpdateApplyBucketContract:
             w_chunks = gather_chunks(plan, p, 1)
             w_b, v_b = {}, {}
             for b in plan.buckets:
-                w_b[b.key], v_b[b.key] = opt.update_apply_bucket(
+                w_b[b.key], v_b[b.key], _ = opt.update_apply_bucket(
                     b, shards[b.key], s.buckets[b.key], w_chunks[b.key],
                     0, clip)
             return scatter(plan, w_b, p, cast=True), v_b

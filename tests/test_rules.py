@@ -1,0 +1,232 @@
+"""The pluggable matrix-update-rule API (core/rules.py) on the generic
+bucketed engine (core/engine.py).
+
+Invariants under test:
+  * batched Newton-Schulz over a stacked leading ``L`` axis equals the
+    per-matrix iteration bit-for-bit in fp32 (allclose in bf16), on both
+    the XLA and interpret-mode Pallas backends — the foundation of the
+    NS-family rules batching one quintic pipeline per bucket;
+  * every registered rule run through the bucketed engine — uneven and
+    padded buckets included — matches its per-leaf reference optimizer
+    bitwise over multiple steps (slots and bias corrections stepping);
+  * every registered rule's single-pass ``update_apply`` equals the
+    two-pass ``update`` + ``apply_updates`` — bitwise for additive rules,
+    allclose for Muown's multiplicative norm control (its two-pass form
+    re-associates the final add);
+  * the uniform ``BucketedState`` layout (momentum buckets + slot stripes)
+    round-trips through the checkpoint manager for every rule, and the
+    mixed four-field state does too.
+
+The 4-device ZeRO-2 equivalences for the same family run in
+tests/_zero_shard_worker.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import apply_updates, constant
+from repro.core.engine import matrix_optimizer
+from repro.core.muon import newton_schulz
+from repro.core.rules import make_rule, per_leaf_reference, rule_names
+from repro.core.types import tree_paths
+
+# uneven bucket mix: 8x16 holds 2+1 slices, 8x24 a lone 3-stack, 16x8 a
+# single matrix on the transpose (d_in > d_out) Newton-Schulz path
+SHAPES = {"a/w": (2, 8, 16), "b/w": (8, 16), "c/w": (3, 8, 24),
+          "d/w": (16, 8)}
+
+
+def _tree(shapes, seed=0, dtype=jnp.float32):
+    return {k: jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(seed), i), s, dtype)
+        for i, (k, s) in enumerate(sorted(shapes.items()))}
+
+
+class TestBatchedNewtonSchulz:
+    """newton_schulz batches over leading dims; each slice must compute
+    exactly what it would as a standalone matrix."""
+
+    @pytest.mark.parametrize("use_kernel", [False, True],
+                             ids=["xla", "pallas-interpret"])
+    @pytest.mark.parametrize("shape", [(5, 8, 16), (3, 8, 24), (4, 16, 8)],
+                             ids=["8x16", "8x24", "16x8-transpose"])
+    def test_fp32_bitwise_per_slice(self, use_kernel, shape):
+        x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+        batched = jax.jit(lambda v: newton_schulz(
+            v, steps=3, use_kernel=use_kernel))(x)
+        one = jax.jit(lambda v: newton_schulz(
+            v, steps=3, use_kernel=use_kernel))
+        for i in range(shape[0]):
+            np.testing.assert_array_equal(
+                np.asarray(batched[i]), np.asarray(one(x[i])),
+                err_msg=f"slice {i} (use_kernel={use_kernel})")
+
+    def test_zero_slices_stay_zero(self):
+        """A zero slice (the engine's shard padding) must come out exactly
+        zero — the normalization's eps keeps 0/(0+eps) at 0."""
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16), jnp.float32)
+        x = x.at[2].set(0.0)
+        out = newton_schulz(x, steps=5)
+        assert np.all(np.asarray(out[2]) == 0)
+        # and the live slices are unperturbed by the dead one
+        ref = newton_schulz(jnp.stack([x[0], x[1], x[3]]), steps=5)
+        np.testing.assert_array_equal(np.asarray(out)[[0, 1, 3]],
+                                      np.asarray(ref))
+
+    def test_bf16_allclose_per_slice(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 16), jnp.bfloat16)
+        batched = newton_schulz(x, steps=3)
+        assert batched.dtype == jnp.bfloat16
+        for i in range(4):
+            np.testing.assert_allclose(
+                np.asarray(batched[i], np.float32),
+                np.asarray(newton_schulz(x[i], steps=3), np.float32),
+                atol=1e-2)
+
+
+class TestEngineMatchesPerLeafReference:
+    """The bucketed engine vs the per-leaf reference, every rule, two steps
+    (slots and bias corrections advance), uneven AND padded buckets."""
+
+    @pytest.mark.parametrize("name", rule_names())
+    @pytest.mark.parametrize("pad", [1, 2], ids=["unpadded", "padded"])
+    def test_bitwise_two_steps(self, name, pad):
+        rule = make_rule(name, beta=0.9, ns_steps=2)
+        # shard_size pads the buckets without sharding them (the momentum
+        # stays full, so no mesh axis is needed): pad slices must be inert
+        eng = matrix_optimizer(rule, constant(0.1), fused_apply=True,
+                               shard_size=pad)
+        ref = per_leaf_reference(rule, constant(0.1))
+        params = _tree(SHAPES, seed=0)
+        pe, se = params, eng.init(params)
+        pr, sr = params, ref.init(params)
+        for step in range(2):
+            grads = _tree(SHAPES, seed=10 + step)
+            pe, se = jax.jit(eng.update_apply)(grads, se, pe,
+                                               jnp.int32(step))
+            pr, sr = jax.jit(ref.update_apply)(grads, sr, pr,
+                                               jnp.int32(step))
+            for k in params:
+                np.testing.assert_array_equal(
+                    np.asarray(pe[k]), np.asarray(pr[k]),
+                    err_msg=f"{name} step {step} pad={pad}: {k}")
+        if pad > 1:
+            plan = eng.bucket_plan(params)
+            for b in plan.buckets:
+                assert np.all(np.asarray(se.buckets[b.key])[b.size:] == 0), \
+                    (name, b.key)
+                for slot, per_bucket in se.slots.items():
+                    assert np.all(
+                        np.asarray(per_bucket[b.key])[b.size:] == 0), \
+                        (name, slot, b.key)
+
+    def test_muon_kernel_interpret_matches_reference(self):
+        """The batched multi-launch NS transform (kernels path) over uneven
+        buckets equals the per-leaf kernel reference bitwise."""
+        rule = make_rule("muon", beta=0.9, ns_steps=2)
+        eng = matrix_optimizer(rule, constant(0.1), fused_apply=True,
+                               use_kernel=True)
+        ref = per_leaf_reference(rule, constant(0.1), use_kernel=True)
+        params = _tree(SHAPES, seed=3)
+        grads = _tree(SHAPES, seed=4)
+        pe, _ = eng.update_apply(grads, eng.init(params), params,
+                                 jnp.int32(0))
+        pr, _ = ref.update_apply(grads, ref.init(params), params,
+                                 jnp.int32(0))
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(pe[k]),
+                                          np.asarray(pr[k]), err_msg=k)
+
+
+class TestUpdateApplyConsistency:
+    """Property: for every registered rule the fused single-pass
+    ``update_apply`` and the two-pass ``update`` + ``apply_updates`` agree.
+    Momentum and slot stripes are bitwise (identical expressions).  Params
+    of additive rules share the canonical op order, but the two jitted
+    programs fuse the preconditioner chain into its consumers differently
+    (LLVM FMA contraction), so the end-to-end guarantee across separately
+    jitted programs is FMA-contraction-tight (atol 1e-7), not bitwise.
+    The non-additive Muown re-associates the final add in its two-pass
+    form and gets the looser tolerance."""
+
+    @pytest.mark.parametrize("name", rule_names())
+    def test_two_pass_matches_fused(self, name):
+        rule = make_rule(name, beta=0.9, ns_steps=2)
+        opt = matrix_optimizer(rule, constant(0.1), fused_apply=True)
+
+        @jax.jit
+        def two_pass(g, s, p, step):
+            u, s2 = opt.update(g, s, p, step)
+            return apply_updates(p, u), s2
+
+        params = _tree(SHAPES, seed=5)
+        p1, s1 = params, opt.init(params)
+        p2, s2 = params, opt.init(params)
+        for step in range(2):
+            grads = _tree(SHAPES, seed=20 + step)
+            p1, s1 = jax.jit(opt.update_apply)(grads, s1, p1,
+                                               jnp.int32(step))
+            p2, s2 = two_pass(grads, s2, p2, jnp.int32(step))
+            for k in params:
+                tol = (dict(rtol=1e-6, atol=1e-6) if not rule.additive
+                       else dict(rtol=1e-6, atol=1e-7))
+                np.testing.assert_allclose(
+                    np.asarray(p1[k]), np.asarray(p2[k]), **tol,
+                    err_msg=f"{name} step {step}: {k}")
+            for bk in s1.buckets:
+                np.testing.assert_array_equal(
+                    np.asarray(s1.buckets[bk]), np.asarray(s2.buckets[bk]),
+                    err_msg=f"{name} momentum {bk}")
+            for slot in s1.slots:
+                for bk in s1.slots[slot]:
+                    np.testing.assert_array_equal(
+                        np.asarray(s1.slots[slot][bk]),
+                        np.asarray(s2.slots[slot][bk]),
+                        err_msg=f"{name} slot {slot}/{bk}")
+
+
+class TestStateCheckpointRoundTrip:
+    """The uniform stacked-bucket state layout makes the checkpoint manager
+    rule-agnostic: one save/restore path for the whole family, slot stripes
+    included."""
+
+    @pytest.mark.parametrize("name", rule_names())
+    def test_bucketed_state_roundtrip(self, name, tmp_path):
+        rule = make_rule(name, beta=0.9, ns_steps=2)
+        opt = matrix_optimizer(rule, constant(0.1), fused_apply=True)
+        params = _tree(SHAPES, seed=6)
+        _, state = opt.update_apply(_tree(SHAPES, seed=7), opt.init(params),
+                                    params, jnp.int32(0))
+        mgr = CheckpointManager(str(tmp_path / name), async_save=False)
+        mgr.save(1, state)
+        out = mgr.restore_latest(state)
+        assert out is not None
+        restored, step, _ = out
+        assert step == 1
+        for (ka, a), (kb, b) in zip(tree_paths(restored), tree_paths(state)):
+            assert ka == kb
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{name}: {ka}")
+
+    def test_mixed_state_roundtrip(self, tmp_path):
+        """The four-field mixed state (momentum, nu, buckets, slots) with a
+        slot-carrying rule survives save/restore, matrix and AdamW leaves
+        alike."""
+        from repro.core import mixed_optimizer
+
+        shapes = dict(SHAPES, norm=(8,), bias=(16,))
+        params = _tree(shapes, seed=8)
+        opt = mixed_optimizer("normuon", constant(0.1), constant(0.05),
+                              fused_apply=True, ns_steps=2)
+        _, state = opt.update_apply(_tree(shapes, seed=9), opt.init(params),
+                                    params, jnp.int32(0))
+        assert state.slots["nu"], "normuon must carry nu stripes"
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(2, state)
+        restored, step, _ = mgr.restore_latest(state)
+        assert step == 2
+        for (ka, a), (_, b) in zip(tree_paths(restored), tree_paths(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=ka)

@@ -40,49 +40,66 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        # serializes concurrent save() callers — the watchdog's emergency
+        # save runs on a timer thread and may race the main loop's periodic
+        # save; without this, both would join/replace self._thread at once
+        self._save_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def _step_dir(self, step: int) -> Path:
         return self.dir / f"step_{step:09d}"
 
     def save(self, step: int, state: Any, data_step: Optional[int] = None,
-             block: bool = False):
-        """state: arbitrary pytree of arrays."""
-        self.wait()  # one in-flight save at a time
-        flat = tree_paths(state)
-        host_arrays = {f"leaf_{i}": np.asarray(v) for i, (_, v) in enumerate(flat)}
-        manifest = {
-            "step": step,
-            "data_step": data_step if data_step is not None else step,
-            "time": time.time(),
-            "leaves": [{"path": p, "shape": list(np.shape(v)),
-                        "dtype": str(np.asarray(v).dtype)} for p, v in flat],
-        }
+             block: bool = False, layout: Optional[dict] = None):
+        """state: arbitrary pytree of arrays.  ``layout`` (JSON-serializable,
+        see ``repro.distributed.elastic.state_layout``) records what mesh /
+        shard size the state is laid out for, so restore can detect a mesh
+        mismatch and reshard instead of feeding garbage into the sharded
+        update."""
+        with self._save_lock:
+            self._join()  # one in-flight save at a time
+            flat = tree_paths(state)
+            host_arrays = {f"leaf_{i}": np.asarray(v)
+                           for i, (_, v) in enumerate(flat)}
+            manifest = {
+                "step": step,
+                "data_step": data_step if data_step is not None else step,
+                "time": time.time(),
+                "leaves": [{"path": p, "shape": list(np.shape(v)),
+                            "dtype": str(np.asarray(v).dtype)}
+                           for p, v in flat],
+            }
+            if layout is not None:
+                manifest["layout"] = layout
 
-        def _write():
-            tmp = self.dir / f".tmp_step_{step:09d}"
-            if tmp.exists():
-                shutil.rmtree(tmp)
-            tmp.mkdir(parents=True)
-            np.savez(tmp / "shard_00000.npz", **host_arrays)
-            (tmp / "manifest.json").write_text(json.dumps(manifest))
-            (tmp / "COMMITTED").write_text("ok")
-            final = self._step_dir(step)
-            if final.exists():
-                shutil.rmtree(final)
-            os.replace(tmp, final)
-            self._prune()
+            def _write():
+                tmp = self.dir / f".tmp_step_{step:09d}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                np.savez(tmp / "shard_00000.npz", **host_arrays)
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+                (tmp / "COMMITTED").write_text("ok")
+                final = self._step_dir(step)
+                if final.exists():
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                self._prune()
 
-        if self.async_save and not block:
-            self._thread = threading.Thread(target=_write, daemon=True)
-            self._thread.start()
-        else:
-            _write()
+            if self.async_save and not block:
+                self._thread = threading.Thread(target=_write, daemon=True)
+                self._thread.start()
+            else:
+                _write()
 
-    def wait(self):
+    def _join(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+
+    def wait(self):
+        with self._save_lock:
+            self._join()
 
     # ------------------------------------------------------------------
     def _committed_steps(self):
@@ -101,15 +118,61 @@ class CheckpointManager:
         steps = self._committed_steps()
         return steps[-1] if steps else None
 
+    def read_layout(self, step: int) -> Optional[dict]:
+        """The state-layout manifest entry written at save time (mesh size,
+        shard size, rule, bucket plan — see
+        ``repro.distributed.elastic.state_layout``); None for checkpoints
+        that predate it."""
+        manifest = json.loads(
+            (self._step_dir(step) / "manifest.json").read_text())
+        return manifest.get("layout")
+
+    def _validate(self, step: int, manifest: dict, like: Any) -> None:
+        """Template-vs-manifest validation: restoring into a template whose
+        tree, shapes or dtypes disagree with what was saved must fail
+        naming the offending leaf and both sides — not die in an opaque
+        reshape, and never silently coerce (a shape mismatch on a bucketed
+        state usually means a mesh-size mismatch, which has a dedicated
+        fix)."""
+        flat = tree_paths(like)
+        man = manifest["leaves"]
+        if len(flat) != len(man):
+            raise ValueError(
+                f"checkpoint step {step} holds {len(man)} leaves but the "
+                f"restore template has {len(flat)} — different state "
+                f"structure (model / optimizer / compression mismatch?)")
+        for (path, leaf), m in zip(flat, man):
+            if m["path"] != path:
+                raise ValueError(
+                    f"checkpoint step {step}: tree mismatch — checkpoint "
+                    f"leaf {m['path']!r} where the template has {path!r}")
+            shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
+            if tuple(m["shape"]) != shape:
+                raise ValueError(
+                    f"checkpoint step {step}: leaf {path!r} was saved with "
+                    f"shape {tuple(m['shape'])} but the template expects "
+                    f"{shape} — a bucketed-state mismatch like this usually "
+                    f"means the checkpoint was written for a different mesh "
+                    f"size (see read_layout / "
+                    f"repro.distributed.elastic.reshard_bucketed_state)")
+            dtype = getattr(leaf, "dtype", None)
+            if dtype is not None and m["dtype"] != str(np.dtype(dtype)):
+                raise ValueError(
+                    f"checkpoint step {step}: leaf {path!r} was saved as "
+                    f"{m['dtype']} but the template expects "
+                    f"{np.dtype(dtype)} — refusing to cast optimizer state "
+                    f"silently")
+
     def restore(self, step: int, like: Any) -> Tuple[Any, int]:
-        """Restore into the structure of ``like``; returns (state, data_step)."""
+        """Restore into the structure of ``like``; returns (state, data_step).
+        ``like``'s leaves only need shapes/dtypes (``jax.eval_shape``
+        templates work); they are validated against the manifest first."""
         d = self._step_dir(step)
         manifest = json.loads((d / "manifest.json").read_text())
+        self._validate(step, manifest, like)
         with np.load(d / "shard_00000.npz") as z:
             arrays = [z[f"leaf_{i}"] for i in range(len(manifest["leaves"]))]
         leaves, treedef = jax.tree_util.tree_flatten(like)
-        assert len(leaves) == len(arrays), (
-            f"checkpoint has {len(arrays)} leaves, expected {len(leaves)}")
         restored = [np.asarray(a).astype(l.dtype).reshape(l.shape)
                     for a, l in zip(arrays, leaves)]
         return (jax.tree_util.tree_unflatten(treedef, restored),

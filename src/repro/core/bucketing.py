@@ -331,6 +331,52 @@ def scatter(plan: BucketPlan, stacked: Dict[str, jax.Array],
     return map_with_path(visit, base)
 
 
+def unpad_buckets(plan: BucketPlan,
+                  bufs: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Strip the pad slices from per-bucket stacked buffers: ``(padded L,
+    ...)`` -> ``(true L, ...)``.  Works on the momentum buckets and on the
+    rule slot stripes alike (only the leading axis is interpreted).
+
+    Together with :func:`repad_buckets` this is the elastic reshard: the
+    *only* mesh-size-dependent quantity in the stacked layout is
+    ``padded_size`` (= ceil(L / shard_size) * shard_size), and pad slices
+    are identically zero by the engine's invariant, so unpad -> repad under
+    the new plan relocates the state to any mesh size without touching a
+    single real slice."""
+    out = {}
+    for b in plan.buckets:
+        buf = bufs[b.key]
+        if buf.shape[0] != b.padded:
+            raise ValueError(
+                f"bucket {b.key!r}: buffer holds {buf.shape[0]} slices but "
+                f"the plan stacks {b.size} padded to {b.padded} — was this "
+                f"buffer produced under a different plan / shard_size?")
+        out[b.key] = buf[:b.size]
+    return out
+
+
+def repad_buckets(plan: BucketPlan,
+                  bufs: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Inverse of :func:`unpad_buckets` under ``plan``: zero-pad each
+    true-``(L, ...)`` buffer back to the plan's padded size.  Zero fill is
+    exact — pad slices carry zero grad/momentum/slot state by construction
+    (see :func:`build_plan`)."""
+    out = {}
+    for b in plan.buckets:
+        buf = jnp.asarray(bufs[b.key])
+        if buf.shape[0] != b.size:
+            raise ValueError(
+                f"bucket {b.key!r}: buffer holds {buf.shape[0]} slices but "
+                f"the plan stacks {b.size} — unpad under the writing plan "
+                f"before repadding under this one")
+        if b.padded > b.size:
+            pad = jnp.zeros((b.padded - b.size,) + tuple(buf.shape[1:]),
+                            buf.dtype)
+            buf = jnp.concatenate([buf, pad], axis=0)
+        out[b.key] = buf
+    return out
+
+
 def fused_rownorm_update(plan: BucketPlan,
                          grad_buckets: Dict[str, jax.Array],
                          mom_buckets: Dict[str, jax.Array],

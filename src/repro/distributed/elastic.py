@@ -2,7 +2,8 @@
 
 On preemption / node loss the job restarts on whatever slice is healthy.
 Checkpoints are mesh-agnostic (host-local npz of full logical arrays, or
-per-host shards re-assembled by the manager), so elasticity is:
+per-host shards re-assembled by the manager), so for plain logical-axis
+sharded trees elasticity is:
 
     state_small = reshard(state, new_mesh, sharding_fn)
 
@@ -12,18 +13,48 @@ table (distributed/sharding.py) silently falls back to replication for
 dims the smaller mesh no longer divides, so any (data, model) factor of
 the original mesh is a valid restart target.
 
+The ZeRO-2 bucketed optimizer state is the one part of a checkpoint whose
+*logical shapes* depend on the mesh size: every stacked momentum bucket and
+rule slot stripe is allocated at ``padded_size = ceil(L / N) * N`` so it
+shards exactly ``N`` ways (core/bucketing.py).  A checkpoint written at
+``N`` therefore cannot be fed to an optimizer built for ``N'`` — the
+``dynamic_slice`` shard math would read garbage, which ``shard_count``
+rejects.  :func:`reshard_bucketed_state` is the restart rung of the
+monitor module's ``detect -> checkpoint -> restart -> resume`` ladder:
+unpad every bucket to its true ``L`` under the writing plan, repad under
+the plan built with ``pad_multiple=N'``.  Pad slices are identically zero,
+so the transform is exact — not one real slice changes.  Per-leaf state
+(the AdamW momenta of the mixed optimizer, the int8 error-feedback
+residual of ``CompressionState``) is laid out like params and passes
+through untouched; chunking is pure slicing (linear), so the carried
+residual stays exact under the new chunk boundaries.
+
+Mesh-size detection is driven by the layout manifest
+(:func:`state_layout`) the checkpoint manager stores at save time; layouts
+that differ in anything *other* than mesh/shard size (different rule,
+different slots, different param tree) cannot be resharded and
+:func:`validate_relayout` fails loudly naming both layouts.
+
 The data pipeline is (seed, host, step)-addressed, so changing num_hosts
 re-partitions the stream without replaying or skipping batches
 (tests/test_substrate.py::test_stream_elastic_repartition).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+import json
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import bucketing
+from repro.core.types import Optimizer, PyTree
 from repro.distributed.sharding import spec_for
+
+
+class LayoutMismatchError(ValueError):
+    """A checkpoint's state layout cannot be resharded onto this run's
+    layout (something other than the mesh/shard size differs)."""
 
 
 def reshard(tree: Any, mesh: Mesh,
@@ -48,3 +79,133 @@ def reshard_like_specs(tree: Any, spec_tree: Any, mesh: Mesh):
     return jax.tree_util.tree_map(
         leaf, tree, spec_tree,
         is_leaf=lambda t: isinstance(t, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# layout manifest: what a checkpointed ZeRO-2 state is laid out FOR
+# ---------------------------------------------------------------------------
+
+def plan_layout(plan: bucketing.BucketPlan) -> List[Dict[str, Any]]:
+    """JSON-serializable signature of a bucket plan — bucket composition
+    (keys, true sizes, every entry's path and shape) plus the mesh-size-
+    dependent padded size."""
+    return [{"key": b.key, "d_in": b.d_in, "d_out": b.d_out,
+             "size": b.size, "padded": b.padded,
+             "entries": [{"path": e.path, "shape": list(e.shape)}
+                         for e in b.entries]}
+            for b in plan.buckets]
+
+
+def state_layout(opt: Optimizer, params: PyTree, *, mesh_size: int,
+                 rule: str, compress: bool = False,
+                 opt_state: Any = None) -> Dict[str, Any]:
+    """The layout manifest entry the checkpoint manager stores at save
+    time: everything restore needs to decide between a plain load, an
+    automatic elastic reshard (only the mesh/shard size differs), and a
+    loud :class:`LayoutMismatchError`."""
+    plan = opt.bucket_plan(params) if opt.bucket_plan is not None else None
+    slots = (sorted(getattr(opt_state, "slots", {}) or {})
+             if opt_state is not None else [])
+    return {"format": 1,
+            "mesh_size": int(mesh_size),
+            "shard_size": int(getattr(opt, "shard_size", 1) or 1),
+            "rule": rule,
+            "slots": slots,
+            "compress": bool(compress),
+            "plan": plan_layout(plan) if plan is not None else None}
+
+
+def _reshardable_part(layout: Dict[str, Any]) -> Dict[str, Any]:
+    """Everything in a layout that must match for a reshard to be legal —
+    i.e. the layout minus the mesh-size-dependent fields (``mesh_size``,
+    ``shard_size``, per-bucket ``padded``) and minus ``compress`` (the EF
+    residual is per-leaf and carried either way)."""
+    plan = layout.get("plan")
+    return {"rule": layout.get("rule"),
+            "slots": list(layout.get("slots") or []),
+            "plan": ([{k: v for k, v in b.items() if k != "padded"}
+                      for b in plan] if plan is not None else None)}
+
+
+def validate_relayout(old: Optional[Dict[str, Any]],
+                      new: Dict[str, Any]) -> None:
+    """Raise :class:`LayoutMismatchError` unless ``old`` differs from
+    ``new`` only in mesh/shard size (the one difference
+    :func:`reshard_bucketed_state` can absorb).  The error names both
+    layouts in full — a checkpoint written by a different rule or for a
+    different param tree must never be silently coerced."""
+    if old is None:
+        raise LayoutMismatchError(
+            "checkpoint has no layout manifest (written before elastic "
+            "restart existed?) but the mesh size cannot be verified — "
+            f"re-save it with a layout; this run's layout:\n"
+            f"  {json.dumps(new, sort_keys=True)}")
+    a, b = _reshardable_part(old), _reshardable_part(new)
+    if a != b:
+        fields = [k for k in a if a[k] != b[k]]
+        raise LayoutMismatchError(
+            f"checkpoint layout is not resharding-compatible with this run "
+            f"— {', '.join(fields)} differ (only the mesh/shard size may):\n"
+            f"  checkpoint layout: {json.dumps(old, sort_keys=True)}\n"
+            f"  this run's layout: {json.dumps(new, sort_keys=True)}")
+
+
+# ---------------------------------------------------------------------------
+# the reshard transform itself
+# ---------------------------------------------------------------------------
+
+def _check_same_stacking(old_plan: bucketing.BucketPlan,
+                         new_plan: bucketing.BucketPlan) -> None:
+    def stacking(plan):
+        return tuple((b.key, b.size, b.entries) for b in plan.buckets)
+
+    if stacking(old_plan) != stacking(new_plan):
+        raise LayoutMismatchError(
+            "bucket plans stack different leaves — the state belongs to a "
+            "different param tree and cannot be resharded:\n"
+            f"  checkpoint plan: {json.dumps(plan_layout(old_plan))}\n"
+            f"  this run's plan: {json.dumps(plan_layout(new_plan))}")
+
+
+def reshard_bucketed_state(state: Any, old_plan: bucketing.BucketPlan,
+                           new_plan: bucketing.BucketPlan) -> Any:
+    """Re-lay a bucketed optimizer state out for a new mesh size.
+
+    ``state`` is any NamedTuple with stacked ``buckets`` / ``slots`` fields
+    (``BucketedState``, ``FusedMixedState``); every stacked buffer —
+    momentum and each rule slot stripe — is unpadded to its true ``L``
+    under ``old_plan`` and repadded under ``new_plan``.  All other fields
+    (per-leaf AdamW momenta, ...) are mesh-agnostic and pass through
+    unchanged, as does a state with no ``buckets`` at all (the per-leaf
+    engines).  Exact by construction: pad slices are identically zero, and
+    not one real slice is moved relative to its bucket."""
+    buckets = getattr(state, "buckets", None)
+    if buckets is None:
+        return state
+    _check_same_stacking(old_plan, new_plan)
+    new_buckets = bucketing.repad_buckets(
+        new_plan, bucketing.unpad_buckets(old_plan, buckets))
+    new_slots = {
+        name: bucketing.repad_buckets(
+            new_plan, bucketing.unpad_buckets(old_plan, per_bucket))
+        for name, per_bucket in getattr(state, "slots", {}).items()}
+    return state._replace(buckets=new_buckets, slots=new_slots)
+
+
+def restore_resharded(mgr: Any, step: int, params: PyTree, comp_state: Any,
+                      *, opt_new: Optimizer,
+                      opt_old: Optimizer) -> Tuple[Any, int]:
+    """Restore a ZeRO-2 ``(params, opt_state, comp_state)`` checkpoint
+    written under ``opt_old``'s layout and re-lay the optimizer state out
+    for ``opt_new``.  The writer-mesh restore template comes from
+    ``jax.eval_shape`` — no old-layout state is ever materialized beyond
+    the restored host arrays.  The ``CompressionState`` EF residual is
+    per-leaf (mesh-agnostic) and restores as-is; chunking linearity keeps
+    it exact under the new rank boundaries.  Returns ``((params,
+    opt_state, comp_state), data_step)``."""
+    old_template = jax.eval_shape(opt_old.init, params)
+    (params, old_state, comp_state), data_step = mgr.restore(
+        step, (params, old_template, comp_state))
+    new_state = reshard_bucketed_state(
+        old_state, opt_old.bucket_plan(params), opt_new.bucket_plan(params))
+    return (params, new_state, comp_state), data_step

@@ -60,6 +60,65 @@ class StepTimeMonitor:
         return flagged
 
 
+class HangGuard:
+    """Wires the two detect rungs to the checkpoint rung of the ladder.
+
+    * :class:`Watchdog` with a hard per-step deadline: a hung collective
+      never returns, so only the timer thread can act — it calls
+      ``save_fn`` (an emergency *blocking* checkpoint of the last completed
+      step).  ``save_fn`` must read a host-side snapshot of the state: the
+      in-flight step owns the donated device buffers, so live arrays are
+      unreadable exactly when the watchdog fires.
+    * :class:`StepTimeMonitor`: a flagged straggler step triggers the same
+      emergency save — the launcher's cue to restart without the slow host.
+
+    The remaining rungs are checkpoint/manager.py (atomic commit, so the
+    checkpoint survives the kill that follows) and distributed/elastic.py
+    (the restarted job resumes on whatever mesh size is healthy).
+
+    Usage: ``arm()`` before launching each step, ``record()`` after it
+    completes (with the fresh snapshot already in place), ``stop()`` when
+    the loop exits."""
+
+    def __init__(self, deadline_s: float, save_fn: Callable[[], None],
+                 monitor: Optional["StepTimeMonitor"] = None):
+        self.monitor = monitor or StepTimeMonitor()
+        self._save = save_fn
+        self.fired = False   # hard-deadline timeouts seen
+        self.flagged = 0     # straggler steps seen
+        # the timer thread and the main loop may both reach the save
+        self._saving = threading.Lock()
+        self.watchdog = (Watchdog(deadline_s, self._on_timeout)
+                         if deadline_s else None)
+
+    def _emergency_save(self, why: str):
+        with self._saving:
+            print(f"[watchdog] {why} — emergency checkpoint", flush=True)
+            self._save()
+
+    def _on_timeout(self):
+        self.fired = True
+        self._emergency_save(
+            f"step exceeded the {self.watchdog.deadline:.1f}s hard deadline")
+
+    def arm(self):
+        if self.watchdog is not None:
+            self.watchdog.pet()
+
+    def record(self, step: int, seconds: float) -> bool:
+        flagged = self.monitor.record(step, seconds)
+        if flagged:
+            self.flagged += 1
+            self._emergency_save(
+                f"step {step} flagged as straggler "
+                f"({seconds:.2f}s vs mean {self.monitor.mean:.2f}s)")
+        return flagged
+
+    def stop(self):
+        if self.watchdog is not None:
+            self.watchdog.stop()
+
+
 class Watchdog:
     """Fires ``on_timeout`` if ``pet`` is not called within ``deadline_s``."""
 

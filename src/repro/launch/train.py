@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import signal
 import time
 import warnings
 from pathlib import Path
@@ -19,12 +21,15 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.core import (cosine_with_warmup, global_dominance, make_optimizer,
                         optimizer_names)
+from repro.core.types import tree_paths
 from repro.data.pipeline import make_stream
+from repro.distributed import elastic
 from repro.distributed.sharding import axis_rules
 from repro.launch.mesh import make_local_mesh
 from repro.models import init_params
@@ -40,9 +45,24 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
           momentum_dtype: str = "float32", fused_apply: bool = False,
           zero2: bool = False, compress: bool = True, accum: int = 1,
           overlap: Optional[bool] = None, log_file: str = "",
-          stop_at: int = 0):
+          stop_at: int = 0, kill_at: int = 0,
+          watchdog_deadline: float = 0.0, dump_params: str = ""):
     """``stop_at`` simulates a crash: train to that step (schedules still
-    span ``steps``) and exit WITHOUT the final checkpoint.
+    span ``steps``) and exit WITHOUT the final checkpoint.  ``kill_at`` is
+    harsher fault injection: SIGKILL the process mid-loop at that step —
+    no cleanup, no final save, an in-flight async checkpoint may be torn
+    (the atomic-commit protocol makes a torn save invisible, not corrupt).
+
+    ``watchdog_deadline`` (seconds) arms the hang/straggler ladder
+    (``distributed/monitor.py``): a step exceeding the hard deadline or
+    flagged as a straggler triggers an emergency blocking checkpoint of
+    the last completed step, taken from a host snapshot (donated device
+    buffers of an in-flight step are unreadable by design).
+
+    Restart is mesh-size-agnostic for ``zero2`` runs: the checkpoint's
+    layout manifest records the writer's shard size, and a mismatch with
+    this run's device count reshards the bucketed state automatically
+    (``distributed/elastic.py``) instead of failing on the padded shapes.
 
     ``fused`` routes matrix parameters through the shape-bucketed engine
     (one preconditioner pass per distinct matrix shape instead of one per
@@ -66,21 +86,29 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
 
     mesh = make_local_mesh(data=len(jax.devices()))
     n_dev = mesh.shape["data"]
-    opt = make_optimizer(optimizer, dict(
-        lr_matrix=cosine_with_warmup(lr_matrix, steps),
-        lr_adamw=cosine_with_warmup(lr_adamw, steps),
-        matrix_embed=matrix_embed,
-        use_kernel=use_kernel,
-        fused=fused,
-        momentum_dtype=momentum_dtype,
-        fused_apply=fused_apply or zero2,
-        shard_axis="data" if zero2 else None,
-        shard_size=n_dev if zero2 else 1,
-    ))
+
+    def build_opt(shard_size: int):
+        return make_optimizer(optimizer, dict(
+            lr_matrix=cosine_with_warmup(lr_matrix, steps),
+            lr_adamw=cosine_with_warmup(lr_adamw, steps),
+            matrix_embed=matrix_embed,
+            use_kernel=use_kernel,
+            fused=fused,
+            momentum_dtype=momentum_dtype,
+            fused_apply=fused_apply or zero2,
+            shard_axis="data" if zero2 else None,
+            shard_size=shard_size,
+        ))
+
+    opt = build_opt(n_dev if zero2 else 1)
 
     params = init_params(cfg, jax.random.PRNGKey(seed))
     opt_state = opt.init(params)
     start_step, data_step = 0, 0
+    layout = elastic.state_layout(opt, params, mesh_size=n_dev,
+                                  rule=optimizer,
+                                  compress=compress and zero2,
+                                  opt_state=opt_state)
 
     if zero2:
         from repro.train.dp_step import init_dp_state, make_dp_train_step
@@ -102,14 +130,28 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
         print(f"[train] preconditioner kernel launches/step: {n}{detail}")
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
-    if mgr is not None:
+    latest = mgr.latest_step() if mgr is not None else None
+    if latest is not None:
         # zero2 checkpoints include the compression error-feedback state:
         # dropping the accumulated residual on restart would break the
         # schedule's unbiased-accumulation guarantee at every resume
-        template = ((params, opt_state, comp_state) if zero2
-                    else (params, opt_state))
-        restored = mgr.restore_latest(template)
-        if restored is not None:
+        old_layout = mgr.read_layout(latest)
+        old_n = old_layout.get("shard_size") if old_layout else None
+        if zero2 and old_layout is not None and old_n != n_dev:
+            # mesh-size mismatch: anything else differing is fatal (loud,
+            # both layouts named), a pure size change reshards exactly
+            elastic.validate_relayout(old_layout, layout)
+            (params, opt_state, comp_state), data_step = \
+                elastic.restore_resharded(mgr, latest, params, comp_state,
+                                          opt_new=opt,
+                                          opt_old=build_opt(old_n))
+            start_step = latest
+            print(f"[train] resumed from step {latest} "
+                  f"(elastic reshard {old_n}-way -> {n_dev}-way)")
+        else:
+            template = ((params, opt_state, comp_state) if zero2
+                        else (params, opt_state))
+            restored = mgr.restore_latest(template)
             if zero2:
                 (params, opt_state, comp_state), start_step, data_step = restored
             else:
@@ -119,6 +161,20 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
     stream = make_stream(cfg, seq, batch, seed=seed, start_step=data_step)
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
 
+    guard, snapshot = None, {}
+    if watchdog_deadline:
+        from repro.distributed.monitor import HangGuard
+
+        def emergency_save():
+            if mgr is None or not snapshot:
+                print("[watchdog] no checkpoint dir or no completed step — "
+                      "nothing to save", flush=True)
+                return
+            mgr.save(snapshot["step"], snapshot["state"],
+                     data_step=snapshot["data_step"], block=True,
+                     layout=layout)
+        guard = HangGuard(watchdog_deadline, emergency_save)
+
     history = []
     t0 = time.time()
     end_step = min(steps, stop_at) if stop_at else steps
@@ -126,12 +182,26 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
         for step in range(start_step, end_step):
             np_batch = next(stream)
             jbatch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+            if guard is not None:
+                guard.arm()
+                t_step = time.time()
             if zero2:
                 params, opt_state, comp_state, metrics = jit_step(
                     params, opt_state, comp_state, jbatch, jnp.int32(step))
             else:
                 params, opt_state, metrics = jit_step(
                     params, opt_state, jbatch, jnp.int32(step))
+            if guard is not None:
+                # host snapshot BEFORE recording: the emergency save must
+                # never read live device buffers — the next step donates
+                # them, and a hung step already owns its donated inputs
+                snapshot.update(
+                    step=step + 1, data_step=stream.step,
+                    state=jax.tree_util.tree_map(
+                        np.asarray,
+                        (params, opt_state, comp_state) if zero2
+                        else (params, opt_state)))
+                guard.record(step, time.time() - t_step)
             if log_every and (step % log_every == 0 or step == steps - 1):
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = step
@@ -150,17 +220,29 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
             if mgr is not None and ckpt_every and (step + 1) % ckpt_every == 0:
                 state = ((params, opt_state, comp_state) if zero2
                          else (params, opt_state))
-                mgr.save(step + 1, state, data_step=stream.step)
+                mgr.save(step + 1, state, data_step=stream.step,
+                         layout=layout)
+            if kill_at and step + 1 == kill_at:
+                print(f"[train] fault injection: SIGKILL at step {step + 1}",
+                      flush=True)
+                os.kill(os.getpid(), signal.SIGKILL)
+    if guard is not None:
+        guard.stop()
     if mgr is not None and end_step == steps:
         state = ((params, opt_state, comp_state) if zero2
                  else (params, opt_state))
-        mgr.save(steps, state, data_step=stream.step, block=True)
+        mgr.save(steps, state, data_step=stream.step, block=True,
+                 layout=layout)
         mgr.wait()
     elif mgr is not None:
         mgr.wait()  # crash simulation: last periodic checkpoint survives
     if log_file:
         Path(log_file).parent.mkdir(parents=True, exist_ok=True)
         Path(log_file).write_text(json.dumps(history, indent=1))
+    if dump_params:
+        Path(dump_params).parent.mkdir(parents=True, exist_ok=True)
+        np.savez(dump_params, **{p: np.asarray(v, np.float32)
+                                 for p, v in tree_paths(params)})
     return params, opt_state, history
 
 
@@ -228,6 +310,20 @@ def main():
                     help="AdamW on LM-head/embeddings (paper App D.4 ablation)")
     ap.add_argument("--stop-at", type=int, default=0,
                     help="simulate a crash at this step (schedules span --steps)")
+    ap.add_argument("--kill-at", type=int, default=0,
+                    help="fault injection: SIGKILL the process mid-loop at "
+                         "this step — no cleanup, no final checkpoint; an "
+                         "in-flight async save may be torn (atomic commit "
+                         "makes it invisible, not corrupt)")
+    ap.add_argument("--watchdog-deadline", type=float, default=0.0,
+                    help="arm the hang/straggler watchdog: a step exceeding "
+                         "this many seconds (or flagged by the step-time "
+                         "monitor) triggers an emergency blocking checkpoint "
+                         "of the last completed step")
+    ap.add_argument("--dump-params", default="",
+                    help="write the final params to this npz (fp32), for "
+                         "cross-run comparison by the fault-injection "
+                         "harnesses")
     ap.add_argument("--log-file", default="")
     args = ap.parse_args()
     engine = args.engine
@@ -255,7 +351,9 @@ def main():
           fused_apply=engine == "single-pass",
           zero2=args.zero2, compress=not args.no_compress,
           accum=args.accum, overlap=overlap,
-          log_file=args.log_file, stop_at=args.stop_at)
+          log_file=args.log_file, stop_at=args.stop_at,
+          kill_at=args.kill_at, watchdog_deadline=args.watchdog_deadline,
+          dump_params=args.dump_params)
 
 
 if __name__ == "__main__":

@@ -39,8 +39,25 @@ is why this cannot run in the main pytest process).  Exercises:
 
 Prints ``ZERO_SHARD_OK`` as the last line on success; any assertion error
 fails the subprocess (and therefore the parent test).
+
+Elastic restart fault injection (``elastic`` / ``elastic-phase`` argv
+modes): an 8-way ZeRO-2 training loop over the synthetic tree is SIGKILLed
+mid-run and resumed 4-way (and 4->8) from the surviving atomic checkpoint;
+the resumed run's final params, momentum, slot stripes and EF residual are
+held BITWISE equal to an uninterrupted run at the target mesh size, for
+the fp32 psum_scatter wire and the int8 error-feedback wire, for rmnp and
+normuon.  Cross-mesh bitwise equality is only meaningful because the
+driving gradients are exactness-preserving (see ``_int_grads``); the
+orchestrator prints ``ELASTIC_OK`` as its last line on success.
 """
+import argparse
 import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
@@ -581,14 +598,248 @@ def two_phase_clip_bitwise():
           "replicated, clip active)")
 
 
+# ---------------------------------------------------------------------------
+# elastic restart fault injection (kill an 8-way run, resume 4-way, bitwise)
+# ---------------------------------------------------------------------------
+
+def _int_grads(step, shapes=None):
+    """Deterministic synthetic gradients valued in {0, +-127} — the
+    exactness trick that makes cross-mesh BITWISE comparison meaningful.
+
+    A real backward pass is not bitwise reproducible across mesh sizes
+    (the gradient-mean association differs with N; ~1 ulp drift per step).
+    These gradients are: every rank contributes the same integer-valued
+    addend, so the fp32 psum_scatter sum is exact at any association
+    (|sum| <= 8 * 127 << 2**24), the /N mean is exact for power-of-two N,
+    and the int8 blockwise quantizer maps {0, +-127} to itself exactly
+    (block scale is 0 or 1 -> zero residual).  Both wires therefore
+    produce bit-identical mean shards at 4 and 8 devices, and the
+    optimizer update itself is mesh-invariant (rule_family_four_way), so
+    whole training trajectories match bitwise across mesh sizes."""
+    shapes = shapes or SHAPES
+    out = {}
+    for i, (k, s) in enumerate(sorted(shapes.items())):
+        rng = np.random.default_rng(np.random.SeedSequence([step, i]))
+        out[k] = jnp.asarray(127.0 * rng.integers(-1, 2, size=s), jnp.float32)
+    return out
+
+
+def elastic_phase(args):
+    """One training phase at the current process's device count: build the
+    ZeRO-2 step (fp32 or int8-EF wire), resume from the checkpoint dir if
+    it holds a committed step — resharding via the layout manifest when the
+    writer's mesh size differs — then train, checkpoint, and optionally
+    SIGKILL itself mid-run or dump the final state."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.engine import matrix_optimizer
+    from repro.core.rules import make_rule
+    from repro.distributed import elastic
+    from repro.distributed.compression import (
+        compressed_reduce_scatter_leaf, init_compression_state)
+
+    n_dev = len(jax.devices())
+    assert n_dev == args.devices, (n_dev, args.devices)
+    mesh = jax.make_mesh((n_dev,), ("data",))
+
+    def build_opt(n):
+        return matrix_optimizer(make_rule(args.rule, beta=0.9, ns_steps=2),
+                                constant(0.05), fused_apply=True,
+                                shard_axis="data", shard_size=n)
+
+    opt = build_opt(n_dev)
+    params = make(0)
+    plan = opt.bucket_plan(params)
+    state = opt.init(params)
+    comp = init_compression_state(params)
+    layout = elastic.state_layout(opt, params, mesh_size=n_dev,
+                                  rule=args.rule, compress=args.compress,
+                                  opt_state=state)
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    start = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        old_layout = mgr.read_layout(latest)
+        elastic.validate_relayout(old_layout, layout)
+        if old_layout["shard_size"] != n_dev:
+            (params, state, comp), _ = elastic.restore_resharded(
+                mgr, latest, params, comp, opt_new=opt,
+                opt_old=build_opt(old_layout["shard_size"]))
+            print(f"[elastic] resumed step {latest}: resharded "
+                  f"{old_layout['shard_size']}-way -> {n_dev}-way")
+        else:
+            (params, state, comp), _ = mgr.restore(
+                latest, (params, state, comp))
+            print(f"[elastic] resumed step {latest} (same mesh)")
+        start = latest
+
+    sspec = bucket_specs(state, mesh)
+
+    def step_fn(g, s, c, p, t):
+        if args.compress:
+            v = jax.tree_util.tree_map(
+                lambda x, e: x.astype(jnp.float32) + e, g, c.error)
+            chunks = bucketing.gather_chunks(plan, v, n_dev,
+                                             dtype=jnp.float32)
+            shards, resid = {}, {}
+            for b in plan.buckets:
+                shards[b.key], resid[b.key] = compressed_reduce_scatter_leaf(
+                    chunks[b.key], "data", n_dev)
+            c = c._replace(error=bucketing.scatter_chunks(plan, resid,
+                                                          c.error))
+        else:
+            chunks = bucketing.gather_chunks(plan, g, n_dev,
+                                             dtype=jnp.float32)
+            shards = {b.key: exact_reduce_scatter(chunks[b.key], "data")
+                      for b in plan.buckets}
+        p_new, s_new = opt.update_apply_sharded(shards, g, s, p, t)
+        return p_new, s_new, c
+
+    step = jax.jit(shard_map(step_fn, mesh=mesh,
+                             in_specs=(P(), sspec, P(), P(), P()),
+                             out_specs=(P(), sspec, P()), check_rep=False))
+
+    for t in range(start, args.steps):
+        g = _int_grads(t)
+        params, state, comp = step(g, state, comp, params, jnp.int32(t))
+        if args.ckpt_every and (t + 1) % args.ckpt_every == 0:
+            mgr.save(t + 1, (params, state, comp), data_step=t + 1,
+                     layout=layout)
+        if args.kill_at and t + 1 == args.kill_at:
+            # genuine ungraceful death: the async save just launched for
+            # this step may be torn — atomic commit keeps it invisible and
+            # resume falls back to the previous committed step, which
+            # replays to the same bitwise trajectory
+            print(f"[elastic] SIGKILL at step {t + 1}", flush=True)
+            os.kill(os.getpid(), signal.SIGKILL)
+    mgr.wait()
+
+    if args.dump:
+        flat = {}
+        for k, v in tree_paths(params):
+            flat[f"p/{k}"] = np.asarray(v)
+        for k, v in state.buckets.items():
+            flat[f"m/{k}"] = np.asarray(v)
+        for name, per in state.slots.items():
+            for k, v in per.items():
+                flat[f"s/{name}/{k}"] = np.asarray(v)
+        for k, v in tree_paths(comp.error):
+            flat[f"e/{k}"] = np.asarray(v)
+        np.savez(args.dump, **flat)
+    print(f"[elastic] phase done at step {args.steps} ({n_dev}-way)")
+
+
+def _phase_args(argv):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rule", default="rmnp")
+    ap.add_argument("--devices", type=int, required=True)
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--ckpt-every", type=int, default=4)
+    ap.add_argument("--kill-at", type=int, default=0)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--dump", default="")
+    return ap.parse_args(argv)
+
+
+def _run_phase(phase_argv, n_dev, timeout=600):
+    """Spawn an ``elastic-phase`` subprocess with its own device count
+    (XLA_FLAGS must be set before jax initializes — hence subprocesses)."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [str(Path(__file__).resolve().parents[1] / "src"),
+                    os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+    cmd = [sys.executable, __file__, "elastic-phase",
+           "--devices", str(n_dev)] + phase_argv
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def elastic_scenario(quick=False):
+    """Kill-and-resume fault injection across mesh sizes.
+
+    For each (rule, wire) x (8->4, 4->8): phase A trains at the source
+    mesh size and SIGKILLs itself mid-run (after at least one committed
+    checkpoint), phase B resumes at the *target* mesh size — the layout
+    manifest flags the mismatch and the state reshards — and a reference
+    phase trains uninterrupted at the target size.  B and the reference
+    must agree BITWISE on params, momentum buckets, slot stripes and the
+    EF residual.  Plus a negative case: resuming with a different rule
+    fails loudly naming both layouts.  ``quick`` runs a single combo (the
+    pytest tier-2 hook); CI runs the full matrix."""
+    combos = [("rmnp", False), ("rmnp", True),
+              ("normuon", False), ("normuon", True)]
+    pairs = [(8, 4), (4, 8)]
+    if quick:
+        combos, pairs = [("rmnp", True)], [(8, 4)]
+    steps, every, kill = 12, 4, 10
+    for rule, compress in combos:
+        for n_from, n_to in pairs:
+            wire = "int8" if compress else "fp32"
+            tag = f"{rule}/{wire} {n_from}->{n_to}"
+            work = tempfile.mkdtemp(prefix="rmnp_elastic_")
+            try:
+                ckpt, ref_ckpt = f"{work}/ckpt", f"{work}/ref_ckpt"
+                dump_b, dump_r = f"{work}/resumed.npz", f"{work}/ref.npz"
+                common = ["--rule", rule, "--steps", str(steps),
+                          "--ckpt-every", str(every)]
+                common += ["--compress"] if compress else []
+                ra = _run_phase(common + ["--ckpt-dir", ckpt,
+                                          "--kill-at", str(kill)], n_from)
+                assert ra.returncode == -signal.SIGKILL, (
+                    tag, ra.returncode, ra.stdout, ra.stderr)
+                rb = _run_phase(common + ["--ckpt-dir", ckpt,
+                                          "--dump", dump_b], n_to)
+                assert rb.returncode == 0, (tag, rb.stdout, rb.stderr)
+                assert (f"resharded {n_from}-way -> {n_to}-way"
+                        in rb.stdout), (tag, rb.stdout)
+                rr = _run_phase(common + ["--ckpt-dir", ref_ckpt,
+                                          "--dump", dump_r], n_to)
+                assert rr.returncode == 0, (tag, rr.stdout, rr.stderr)
+                with np.load(dump_b) as a, np.load(dump_r) as b:
+                    assert set(a.files) == set(b.files), tag
+                    for k in sorted(a.files):
+                        np.testing.assert_array_equal(
+                            a[k], b[k],
+                            err_msg=f"{tag}: {k} resumed != uninterrupted")
+                print(f"elastic {tag}: OK (SIGKILLed run resumed bitwise "
+                      f"== uninterrupted, params+momentum+slots+EF)")
+            finally:
+                shutil.rmtree(work, ignore_errors=True)
+
+    # negative: a checkpoint written by one rule must not resume under
+    # another — loud LayoutMismatchError naming both layouts
+    work = tempfile.mkdtemp(prefix="rmnp_elastic_neg_")
+    try:
+        ok = _run_phase(["--rule", "rmnp", "--steps", "4",
+                         "--ckpt-every", "4", "--ckpt-dir", f"{work}/c"], 4)
+        assert ok.returncode == 0, (ok.stdout, ok.stderr)
+        bad = _run_phase(["--rule", "normuon", "--steps", "8",
+                          "--ckpt-every", "4", "--ckpt-dir", f"{work}/c"], 4)
+        assert bad.returncode != 0, bad.stdout
+        assert "LayoutMismatch" in bad.stderr, bad.stderr
+        assert "rmnp" in bad.stderr and "normuon" in bad.stderr, bad.stderr
+        print("elastic negative: OK (rule mismatch fails loudly, both "
+              "layouts named)")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+    print("ELASTIC_OK")
+
+
 if __name__ == "__main__":
-    synthetic_four_way()
-    synthetic_traced_buffers()
-    dp_step_two_way()
-    dp_step_two_way_zero2()
-    dp_step_pipelined_four_way()
-    rule_family_four_way()
-    rule_family_overlap_report()
-    dp_step_shard_size_mismatch()
-    two_phase_clip_bitwise()
-    print("ZERO_SHARD_OK")
+    if len(sys.argv) > 1 and sys.argv[1] == "elastic-phase":
+        elastic_phase(_phase_args(sys.argv[2:]))
+    elif len(sys.argv) > 1 and sys.argv[1] == "elastic":
+        elastic_scenario(quick="--quick" in sys.argv[2:])
+    else:
+        synthetic_four_way()
+        synthetic_traced_buffers()
+        dp_step_two_way()
+        dp_step_two_way_zero2()
+        dp_step_pipelined_four_way()
+        rule_family_four_way()
+        rule_family_overlap_report()
+        dp_step_shard_size_mismatch()
+        two_phase_clip_bitwise()
+        print("ZERO_SHARD_OK")

@@ -98,6 +98,57 @@ class TestCheckpoint:
             mgr.save(s, state)
         assert mgr._committed_steps() == [3, 4]
 
+    def test_torn_write_is_invisible(self, tmp_path, monkeypatch):
+        """A save killed mid-write (before the COMMITTED marker) must be
+        invisible: restore_latest returns the previous committed step, the
+        torn attempt never shadows it, retention never deletes the last
+        committed checkpoint, and a retried save at the same step recovers
+        from the leftover tmp dir."""
+        import repro.checkpoint.manager as manager_mod
+
+        mgr = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+        state = {"w": jnp.arange(4.0)}
+        mgr.save(1, state, data_step=10)
+
+        # kill the writer mid-npz: partial file on disk, then "SIGKILL"
+        real_savez = manager_mod.np.savez
+
+        def torn_savez(path, **arrays):
+            with open(path, "wb") as f:
+                f.write(b"PK\x03\x04 torn")
+            raise KeyboardInterrupt("killed mid-save")
+
+        monkeypatch.setattr(manager_mod.np, "savez", torn_savez)
+        with pytest.raises(KeyboardInterrupt):
+            mgr.save(2, {"w": jnp.arange(4.0) * 2}, data_step=20)
+        monkeypatch.setattr(manager_mod.np, "savez", real_savez)
+
+        # the torn attempt is a tmp dir — never a visible step
+        assert (tmp_path / ".tmp_step_000000002").exists()
+        assert not (tmp_path / "step_000000002").exists()
+        assert mgr.latest_step() == 1
+        out, step, data_step = mgr.restore_latest(state)
+        assert (step, data_step) == (1, 10)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(state["w"]))
+
+        # keep=1 retention never touches the last committed step, even
+        # with torn/uncommitted dirs lying around
+        d = tmp_path / "step_000000005"
+        d.mkdir()
+        (d / "manifest.json").write_text("{}")
+        mgr._prune()
+        assert mgr.latest_step() == 1
+
+        # a retried save at the torn step wins cleanly over the leftovers
+        mgr.save(2, {"w": jnp.arange(4.0) * 2}, data_step=20)
+        assert not (tmp_path / ".tmp_step_000000002").exists()
+        assert mgr.latest_step() == 2
+        _, step, data_step = mgr.restore_latest(state)
+        assert (step, data_step) == (2, 20)
+        # the retried commit pruned step 1 (keep=1) but kept itself
+        assert mgr._committed_steps() == [2]
+
     def test_async_save(self, tmp_path):
         mgr = CheckpointManager(str(tmp_path), async_save=True)
         mgr.save(5, {"w": jnp.ones((64, 64))})

@@ -34,8 +34,8 @@ def write_artifact(name: str, payload) -> Path:
 def print_table(headers, rows):
     widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows else len(str(h))
               for i, h in enumerate(headers)]
-    line = " | ".join(str(h).ljust(w) for h, w in zip(headers, widths))
+    line = " | ".join(str(h).ljust(w) for h, w in zip(headers, widths, strict=False))
     print(line)
     print("-+-".join("-" * w for w in widths))
     for r in rows:
-        print(" | ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+        print(" | ".join(str(c).ljust(w) for c, w in zip(r, widths, strict=False)))

@@ -60,7 +60,7 @@ def bench_overlap(arch: str, batch: int, seq: int, accums, iters: int):
               f"n_dev*accum={n_dev * a}")
     check_accum = max(valid)  # HLO structural check runs at this accum
 
-    from repro.launch.hlo_cost import collective_overlap_report
+    from repro.analysis.overlap import collective_overlap_report
     plan = opt.bucket_plan(params)
     recs = []
     for compress in (False, True):

@@ -1,0 +1,113 @@
+"""Convention lint: repo discipline rules enforced on the AST.
+
+Repo-scope (no lowering needed):
+
+* **pallas-call-outside-kernels** — every ``pallas_call`` lives under
+  ``src/repro/kernels/``.  Call sites elsewhere bypass the interpret-mode
+  dispatch, the fan-in fallback and the introspection the kernel lint
+  relies on.
+* **bare-dict-plan-cache** — plan caches must be
+  ``bucketing.PlanCache`` (bounded, keyed on leaf signatures), never a
+  bare dict: an unbounded ``{}`` keyed on pytree ids leaks plan metadata
+  across models and silently breaks the one-optimizer-many-models
+  contract.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterator, List, Tuple
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.framework import AnalysisPass, register_pass
+
+_PLAN_CACHE_NAME = re.compile(r"(plan.*cache|^plans$|_plans$)", re.IGNORECASE)
+
+
+def repo_src_root() -> str:
+    """``src/repro`` resolved from this file's location (works from any
+    CWD, including CI)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(here)  # .../src/repro
+
+
+def _py_files(root: str) -> Iterator[str]:
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def _target_names(node: ast.AST) -> Iterator[str]:
+    if isinstance(node, ast.Name):
+        yield node.id
+    elif isinstance(node, ast.Attribute):
+        yield node.attr
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for elt in node.elts:
+            yield from _target_names(elt)
+
+
+def scan_file(path: str, rel: str) -> List[Tuple[str, int, str]]:
+    """[(code, lineno, message)] for one file."""
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as e:
+        return [("syntax-error", e.lineno or 0,
+                 f"{rel}: not parseable: {e.msg}")]
+    in_kernels = rel.startswith("kernels" + os.sep) or rel == "kernels.py"
+    hits: List[Tuple[str, int, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+            if not in_kernels:
+                hits.append((
+                    "pallas-call-outside-kernels", node.lineno,
+                    f"{rel}:{node.lineno}: pallas_call referenced outside "
+                    f"src/repro/kernels/ — route launches through the "
+                    f"kernels package"))
+        elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            value = node.value
+            if not isinstance(value, (ast.Dict, ast.DictComp)):
+                continue
+            for t in targets:
+                for name in _target_names(t):
+                    if _PLAN_CACHE_NAME.search(name):
+                        hits.append((
+                            "bare-dict-plan-cache", node.lineno,
+                            f"{rel}:{node.lineno}: {name!r} assigned a "
+                            f"bare dict — plan caches must be "
+                            f"bucketing.PlanCache (bounded LRU keyed on "
+                            f"leaf signatures)"))
+    return hits
+
+
+@register_pass
+class ConventionsPass(AnalysisPass):
+    name = "conventions"
+    description = ("AST rules: pallas_call only under kernels/, plan "
+                   "caches are PlanCache not bare dicts")
+    scope = "repo"
+
+    def run(self, _artifacts=None) -> List[Finding]:
+        root = repo_src_root()
+        out: List[Finding] = []
+        n_files = 0
+        for path in _py_files(root):
+            rel = os.path.relpath(path, root)
+            if rel.startswith("analysis" + os.sep):
+                continue  # the linter's own sources mention both patterns
+            n_files += 1
+            for code, lineno, message in scan_file(path, rel):
+                out.append(Finding(
+                    pass_name=self.name, severity=Severity.ERROR,
+                    code=code, message=message,
+                    location=f"{rel}:{lineno}"))
+        out.append(Finding(
+            pass_name=self.name, severity=Severity.INFO, code="summary",
+            message=f"scanned {n_files} files under src/repro"))
+        return out

@@ -1,0 +1,347 @@
+"""Shared post-optimization HLO text parser for the analysis passes.
+
+Refactored out of ``launch/hlo_cost.py`` (which is now a consumer, as is
+``benchmarks/overlap.py``): one place owns the shape grammar, the op/
+computation structure, the called-computation links and the data-flow
+graph that every HLO-level pass walks.
+
+Hardened for analysis use: malformed modules yield *named parse issues*
+(:class:`ParseIssue`, surfaced as findings by the pass runner) instead of
+raising mid-analysis — ops with tuple result types, collectives with no
+``replica_groups``, computations with no ROOT, operands referencing
+undefined values and unterminated bodies all parse to something usable.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# shapes
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1,
+    "u4": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _dims(dim_str: str) -> List[int]:
+    return [int(d) for d in dim_str.split(",") if d.strip()]
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in a type string (tuples summed)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        for d in _dims(m.group(2)):
+            n *= d
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        for d in _dims(m.group(2)):
+            n *= d
+        total += n
+    return total
+
+
+def first_shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    return _dims(m.group(2)) if m else []
+
+
+def all_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Every ``(dtype, dims)`` in a type string — tuple results included
+    (a ``(f32[8], s32[])`` tuple yields two entries)."""
+    return [(m.group(1), tuple(_dims(m.group(2))))
+            for m in _SHAPE_RE.finditer(type_str)]
+
+
+# ---------------------------------------------------------------------------
+# parsing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Op:
+    name: str
+    type_str: str       # result type, e.g. "f32[8,16]{1,0}" or "(s32[], ...)"
+    opcode: str
+    operands: List[str]  # %-names referenced in the operand list
+    attrs: str           # everything after the closing paren of operands
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symtab: Dict[str, str] = field(default_factory=dict)  # %name -> type_str
+
+
+class ParseIssue(NamedTuple):
+    """A named, non-fatal defect found while parsing HLO text.  The pass
+    runner surfaces these as WARNING findings so a degraded parse is loud
+    instead of silently under-analyzing."""
+    code: str         # e.g. "no-root", "undefined-operand", "unterminated"
+    where: str        # computation / op name
+    message: str
+
+
+class ParsedModule(NamedTuple):
+    comps: Dict[str, Computation]
+    entry: Optional[str]
+    issues: Tuple[ParseIssue, ...]
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.+\s+\{\s*$")
+_OP_LINE = re.compile(r"^\s+(ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+_PCT_NAME = re.compile(r"%([\w.\-]+)")
+_INT_CONST = re.compile(r"\b[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _split_type_opcode(rest: str) -> Tuple[str, str, str, str]:
+    """rest = '<type> <opcode>(<operands>)<attrs>'.  The type may be a
+    parenthesized tuple, so scan balanced parens from the left."""
+    rest = rest.strip()
+    i = 0
+    if rest.startswith("("):
+        depth = 0
+        for j, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    i = j + 1
+                    break
+    type_end = rest.find(" ", i)
+    if type_end < 0:
+        return rest, "", "", ""
+    type_str = rest[:type_end]
+    tail = rest[type_end + 1:]
+    p = tail.find("(")
+    if p < 0:
+        return type_str, tail.strip(), "", ""
+    opcode = tail[:p].strip()
+    depth = 0
+    end = len(tail)
+    for j in range(p, len(tail)):
+        if tail[j] == "(":
+            depth += 1
+        elif tail[j] == ")":
+            depth -= 1
+            if depth == 0:
+                end = j
+                break
+    operand_str = tail[p + 1:end]
+    attrs = tail[end + 1:]
+    return type_str, opcode, operand_str, attrs
+
+
+def parse_module_checked(text: str) -> ParsedModule:
+    """Parse an HLO text module, collecting :class:`ParseIssue` entries for
+    every recoverable defect instead of raising.  Tuple result types,
+    missing ``replica_groups`` and rootless nested computations all yield a
+    usable (if degraded) parse."""
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    issues: List[ParseIssue] = []
+
+    def close(comp: Computation):
+        comps[comp.name] = comp
+        if comp.ops and not any(
+                o.raw.lstrip().startswith("ROOT") for o in comp.ops):
+            issues.append(ParseIssue(
+                "no-root", comp.name,
+                f"computation {comp.name!r} has no ROOT op; using its last "
+                f"op as the root"))
+
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(name=m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.startswith("}"):
+            close(cur)
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(2), m.group(3)
+        type_str, opcode, operand_str, attrs = _split_type_opcode(rest)
+        operands = _OPERAND_NAME.findall(operand_str)
+        op = Op(name=name, type_str=type_str, opcode=opcode,
+                operands=operands, attrs=attrs, raw=line)
+        cur.ops.append(op)
+        cur.symtab[name] = type_str
+    if cur is not None:
+        issues.append(ParseIssue(
+            "unterminated", cur.name,
+            f"computation {cur.name!r} has no closing brace; parsed as-is"))
+        close(cur)
+    if comps and entry is None:
+        issues.append(ParseIssue(
+            "no-entry", "<module>",
+            "module has no ENTRY computation; cross-computation analyses "
+            "start nowhere"))
+    for comp in comps.values():
+        for op in comp.ops:
+            for dep in op.operands:
+                if dep not in comp.symtab and dep not in comps:
+                    issues.append(ParseIssue(
+                        "undefined-operand", f"{comp.name}/{op.name}",
+                        f"op {op.name!r} references undefined value "
+                        f"%{dep} — data-flow edges through it are lost"))
+    return ParsedModule(comps=comps, entry=entry, issues=tuple(issues))
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    """Historical two-value form (``launch/hlo_cost.py`` contract)."""
+    parsed = parse_module_checked(text)
+    return parsed.comps, parsed.entry
+
+
+# ---------------------------------------------------------------------------
+# attributes: collectives, called computations, donation aliases
+# ---------------------------------------------------------------------------
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_COMP_RE = re.compile(r"true_computation=%?([\w.\-]+)")
+_FALSE_COMP_RE = re.compile(r"false_computation=%?([\w.\-]+)")
+_CALLED_RES = (_CALLS_RE, _BODY_RE, _COND_RE, _TO_APPLY_RE,
+               _TRUE_COMP_RE, _FALSE_COMP_RE)
+
+
+def group_size(attrs: str, default: int) -> int:
+    """Participant count of a collective from its ``replica_groups`` attr;
+    ``default`` when the attribute is missing or empty (a module captured
+    before SPMD partitioning) — never raises."""
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    m = _GROUPS_V2_RE.search(attrs)
+    if m:  # iota format [num_groups, group_size]
+        return max(1, int(m.group(2)))
+    return default
+
+
+def called_comps(op: Op, comps: Dict[str, Computation]) -> List[str]:
+    """Names of computations an op calls into (fusion/call/while/cond),
+    restricted to ones that exist in ``comps``."""
+    names = []
+    for rx in _CALLED_RES:
+        m = rx.search(op.attrs)
+        if m:
+            names.append(m.group(1))
+    m = _BRANCHES_RE.search(op.attrs)
+    if m:
+        names += _PCT_NAME.findall(m.group(1))
+    return [n for n in names if n in comps]
+
+
+# entries nest one level of braces ({output_index}: (n, {param_index}, kind)),
+# so the block body is "anything but braces, or a single balanced pair"
+_ALIAS_BLOCK_RE = re.compile(
+    r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}", re.DOTALL)
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([0-9, ]*)\}:\s*\((\d+),\s*\{([0-9, ]*)\}(?:,\s*([\w-]+))?\)")
+
+
+class IoAlias(NamedTuple):
+    output_index: Tuple[int, ...]   # index path into the (tupled) result
+    param_number: int               # flat entry parameter number
+    param_index: Tuple[int, ...]    # index path into that parameter
+    kind: str                       # "may-alias" / "must-alias" / ""
+
+
+def module_io_aliases(text: str) -> List[IoAlias]:
+    """The module-level ``input_output_alias`` table of a compiled HLO
+    module — the ground truth for whether a donated input actually aliased
+    an output (a dropped donation simply has no entry)."""
+    header = text.split("\n\n", 1)[0]
+    m = _ALIAS_BLOCK_RE.search(header)
+    if not m:
+        return []
+    out = []
+    for e in _ALIAS_ENTRY_RE.finditer(m.group(1)):
+        out.append(IoAlias(
+            output_index=tuple(_dims(e.group(1))),
+            param_number=int(e.group(2)),
+            param_index=tuple(_dims(e.group(3))),
+            kind=e.group(4) or ""))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# data-flow graph
+# ---------------------------------------------------------------------------
+
+Node = Tuple[str, str]  # (computation name, op name)
+
+
+def build_consumer_graph(comps: Dict[str, Computation]) -> Dict[Node, List[Node]]:
+    """Forward data-flow graph over (computation, op) nodes: value -> its
+    consumers.  Called computations are linked in BOTH directions — every
+    op of a called computation feeds the caller op's result, and the
+    caller op feeds every op of its called computations — so an edge
+    survives a hop into a fusion/while/conditional body in either role.
+    Conservative: flowing through a caller op reaches the whole body, not
+    just the operand's true users.  Built once, walked iteratively — HLO
+    operand chains run tens of thousands of ops deep, far past Python's
+    recursion limit."""
+    consumers: Dict[Node, List[Node]] = {}
+    for comp in comps.values():
+        defs = {o.name for o in comp.ops}
+        for op in comp.ops:
+            node = (comp.name, op.name)
+            for dep in op.operands:
+                if dep in defs:
+                    consumers.setdefault((comp.name, dep), []).append(node)
+            for sub in called_comps(op, comps):
+                subc = comps.get(sub)
+                if subc is not None:
+                    for o2 in subc.ops:
+                        consumers.setdefault((sub, o2.name), []).append(node)
+                        consumers.setdefault(node, []).append((sub, o2.name))
+    return consumers
+
+
+def reachable_from(start: Node,
+                   consumers: Dict[Node, List[Node]]) -> set:
+    """All nodes transitively downstream of ``start`` (iterative BFS)."""
+    seen = {start}
+    frontier = [start]
+    while frontier:
+        node = frontier.pop()
+        for nxt in consumers.get(node, ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                frontier.append(nxt)
+    return seen

@@ -1,0 +1,212 @@
+"""Pallas kernel lint: VMEM budgets, grid coverage, dtype discipline.
+
+Kernels are linted at the *trace* level (``kernels/introspect.py``
+collects every ``pallas_call`` with its grid and block specs; nothing
+executes), over a representative sweep of bucket shapes — square, wide,
+tall, lane-unaligned d_out (the pad path) and a fan-in large enough to
+force ``pick_block_n`` to shrink.  Three checks per launch:
+
+* **vmem-budget** — the fp32 residency implied by the block specs
+  (blocks + scratch, 4 B/elt) must fit ``VMEM_BUDGET``; for the RMNP
+  stripe kernels the block shapes are additionally cross-checked against
+  ``pick_block_n``'s own stripe accounting (``_fits``), so the accounting
+  and the actual specs cannot drift apart again (the seed's shrink and
+  grow loops disagreed with each other).
+* **grid-covers-array** — every non-SMEM operand's index map, evaluated
+  over the grid, must tile the full array with no uncovered gap and no
+  block starting fully out of bounds.
+* **implicit-upcast** — widening ``convert_element_type`` ops inside the
+  kernel body must take their input straight from a ref load (``get``):
+  the deliberate load-and-upcast-to-fp32 pattern.  A widening convert in
+  the middle of the arithmetic means mixed-dtype math snuck in.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.framework import AnalysisPass, register_pass
+
+# (L, d_in, d_out) stacked-bucket operand shapes the lint traces with:
+# square, MLP-wide, MLP-tall, lane-unaligned d_out (pad path), and a
+# fan-in big enough that pick_block_n must shrink below 128 lanes
+LINT_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (4, 768, 768),
+    (2, 768, 3072),
+    (2, 3072, 768),
+    (3, 64, 80),
+    (1, 16384, 256),
+)
+
+# kernel-name fragment -> the stripe count pick_block_n budgets for it
+# (see kernels/rmnp_update._fits: 4 = g, v in + v_new, d out; 6 adds the
+# weight block in/out of fused apply plus the in-register d stripe)
+STRIPE_ACCOUNTING: Tuple[Tuple[str, int], ...] = (
+    ("_kernel3d_apply", 6),
+    ("_kernel3d", 4),
+)
+
+
+def _stripes_for(name: str) -> Optional[int]:
+    for frag, stripes in STRIPE_ACCOUNTING:
+        if frag in name:
+            return stripes
+    return None
+
+
+def _trace_targets():
+    """(label, thunk) pairs tracing each public kernel entry point over
+    the lint shapes.  Imports live here so the analysis package imports
+    without jax until a pass actually runs."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    targets = []
+    for (ll, d_in, d_out) in LINT_SHAPES:
+        g = jnp.zeros((ll, d_in, d_out), jnp.float32)
+        targets.append((
+            f"rmnp_bucket_update[{ll}x{d_in}x{d_out}]",
+            lambda g=g: kops.rmnp_bucket_update(g, g, beta=0.95)))
+        targets.append((
+            f"rmnp_bucket_update_apply[{ll}x{d_in}x{d_out}]",
+            lambda g=g: kops.rmnp_bucket_update_apply(
+                g, g, g, 0.1, 0.1, beta=0.95)))
+    for (ll, m, _n) in ((4, 256, 0), (2, 512, 0)):
+        x = jnp.zeros((ll, m, m), jnp.float32)
+        targets.append((
+            f"ns_step[{ll}x{m}x{m}]",
+            lambda x=x: kops.ns_step(x, a=3.0, b=-4.0, c=1.2)))
+    a = jnp.zeros((256, 512), jnp.float32)
+    b = jnp.zeros((512, 256), jnp.float32)
+    targets.append(("matmul[256x512x256]", lambda: kops.matmul(a, b)))
+    return targets
+
+
+def _widening_converts_off_ref(kernel_jaxpr) -> List[str]:
+    """Equation descriptions of widening converts whose input is NOT a
+    direct ref load."""
+    loaded = set()
+    bad: List[str] = []
+    for eqn in kernel_jaxpr.eqns:
+        if eqn.primitive.name == "get":
+            for v in eqn.outvars:
+                loaded.add(v)
+        elif eqn.primitive.name == "convert_element_type":
+            src = eqn.invars[0]
+            src_dt = getattr(getattr(src, "aval", None), "dtype", None)
+            dst_dt = eqn.params.get("new_dtype")
+            if src_dt is None or dst_dt is None:
+                continue
+            src_np, dst_np = np.dtype(src_dt), np.dtype(dst_dt)
+            # bool/int widening is mask bookkeeping, not precision-
+            # sensitive math; only float->float widening matters here
+            if (src_np.kind == "f" and dst_np.kind == "f"
+                    and dst_np.itemsize > src_np.itemsize
+                    and src not in loaded):
+                desc = f"{src_dt} -> {dst_dt}"
+                if desc not in bad:
+                    bad.append(desc)
+    return bad
+
+
+@register_pass
+class KernelLintPass(AnalysisPass):
+    name = "kernel-lint"
+    description = ("Pallas launches fit the VMEM budget, tile their "
+                   "arrays, and upcast only at ref loads")
+    scope = "repo"
+
+    def run(self, _artifacts=None) -> List[Finding]:
+        from repro.kernels import introspect
+        from repro.kernels.rmnp_update import VMEM_BUDGET, _fits
+
+        out: List[Finding] = []
+        n_launches = 0
+        for label, thunk in _trace_targets():
+            try:
+                launches = introspect.collect_kernel_launches(thunk)
+            except Exception as e:  # trace failure is itself a finding
+                out.append(Finding(
+                    pass_name=self.name, severity=Severity.ERROR,
+                    code="trace-failed",
+                    message=f"{label}: tracing raised {type(e).__name__}: "
+                            f"{e}", location=label))
+                continue
+            if not launches:
+                out.append(Finding(
+                    pass_name=self.name, severity=Severity.WARNING,
+                    code="no-launches",
+                    message=f"{label}: no pallas_call traced (reference "
+                            f"fallback?) — kernel not linted",
+                    location=label))
+                continue
+            for launch in launches:
+                n_launches += 1
+                where = f"{label}/{launch.name}"
+                resident = launch.vmem_block_bytes(4)
+                if resident > VMEM_BUDGET:
+                    out.append(Finding(
+                        pass_name=self.name, severity=Severity.ERROR,
+                        code="vmem-over-budget",
+                        message=(f"{where}: block specs imply "
+                                 f"{resident / 2**20:.1f} MiB fp32 VMEM "
+                                 f"residency per program, over the "
+                                 f"{VMEM_BUDGET / 2**20:.0f} MiB budget"),
+                        location=where))
+                stripes = _stripes_for(launch.name)
+                if stripes is not None:
+                    blocks3 = [b for b in launch.blocks
+                               if b.memspace != "smem"
+                               and len(b.block_shape) == 3]
+                    if blocks3:
+                        d_in = blocks3[0].block_shape[-2] or 1
+                        bn = blocks3[0].block_shape[-1] or 1
+                        if not _fits(d_in, bn, stripes):
+                            out.append(Finding(
+                                pass_name=self.name,
+                                severity=Severity.ERROR,
+                                code="stripe-accounting-overrun",
+                                message=(f"{where}: block ({d_in}, {bn}) "
+                                         f"fails _fits at the kernel's "
+                                         f"own stripe count {stripes} — "
+                                         f"pick_block_n accounting and "
+                                         f"the launch spec disagree"),
+                                location=where))
+                for blk in launch.blocks:
+                    if blk.memspace == "smem":
+                        continue
+                    cov = introspect.block_coverage(launch, blk)
+                    for d, lo, hi in cov["uncovered"]:
+                        out.append(Finding(
+                            pass_name=self.name, severity=Severity.ERROR,
+                            code="grid-gap",
+                            message=(f"{where}: {blk.origin} dim {d} "
+                                     f"[{lo}, {hi}) of "
+                                     f"{blk.array_shape} is never "
+                                     f"covered by any block"),
+                            location=where))
+                    for d, start in cov["out_of_bounds"]:
+                        out.append(Finding(
+                            pass_name=self.name, severity=Severity.ERROR,
+                            code="block-out-of-bounds",
+                            message=(f"{where}: {blk.origin} dim {d} "
+                                     f"has a block starting at {start}, "
+                                     f"past extent "
+                                     f"{blk.array_shape[d]}"),
+                            location=where))
+                for desc in _widening_converts_off_ref(launch.kernel_jaxpr):
+                    out.append(Finding(
+                        pass_name=self.name, severity=Severity.WARNING,
+                        code="implicit-upcast",
+                        message=(f"{where}: widening convert {desc} not "
+                                 f"fed by a ref load — mixed-dtype math "
+                                 f"inside the kernel body"),
+                        location=where))
+        out.append(Finding(
+            pass_name=self.name, severity=Severity.INFO, code="summary",
+            message=f"linted {n_launches} launches across "
+                    f"{len(_trace_targets())} trace targets"))
+        return out

@@ -1,0 +1,188 @@
+"""Lower (never execute) every optimizer x engine x wire x accum combo.
+
+Each combo builds the REAL training step — ``make_dp_train_step`` on the
+reduced gpt2-60m config over an abstract 4-device ``data`` mesh — and
+produces :class:`Artifacts` from two compiler views of it:
+
+* ``jax.make_jaxpr`` over abstract operands (the memory pass's view);
+* AOT ``jax.jit(step, donate_argnums=(0, 1)).lower(...).compile()``
+  post-optimization HLO text (the sharding/donation/overlap passes'
+  view).
+
+Nothing is ever run: params, optimizer state and batch are
+``jax.eval_shape`` / ``ShapeDtypeStruct`` abstractions end to end.
+
+Engine semantics: ``bucketed`` is the replicated-state shape-bucketed
+engine (two-pass update + apply_updates); ``single-pass`` is the fused
+ZeRO-2 path (``shard_axis="data", shard_size=4``, reduce-scattered
+gradient shards, pipelined schedule forced with ``overlap=True`` so the
+serialized fallback never masks a pipelining regression).  Wire
+``int8-ef`` turns on the int8 error-feedback gradient compression.
+
+Requires >= 4 CPU devices (``XLA_FLAGS=--xla_force_host_platform_\
+device_count=4`` before jax import — ``repro.analysis.check`` arranges
+this; tests use a subprocess).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.framework import Artifacts, Combo, DonatedLeaf, ENGINES, WIRES
+
+N_DEV = 4
+_LR = 1e-2
+
+# lazily-built shared model fixtures (one per process; plan caches and
+# param avals are pure metadata so sharing across combos is safe)
+_FIXTURE: Dict[str, object] = {}
+
+
+def build_combos(optimizers: Optional[List[str]] = None,
+                 engines: Optional[List[str]] = None,
+                 wires: Optional[List[str]] = None,
+                 accums: Optional[List[int]] = None) -> List[Combo]:
+    """The full matrix: every registry optimizer x engine x wire at
+    ``accum=1``, plus the rmnp ZeRO-2 accumulation points (the pipelined
+    schedule interacts with the accumulation scan, so both wires get an
+    ``accum=4`` combo).  Filters narrow the matrix for the CLI."""
+    from repro.core import optimizer_names
+
+    names = list(optimizers) if optimizers else list(optimizer_names())
+    combos = [Combo(n, e, w, 1)
+              for n in names for e in ENGINES for w in WIRES]
+    if not optimizers or "rmnp" in names:
+        combos.append(Combo("rmnp", "single-pass", "fp32", 4))
+        combos.append(Combo("rmnp", "single-pass", "int8-ef", 4))
+    if engines:
+        combos = [c for c in combos if c.engine in engines]
+    if wires:
+        combos = [c for c in combos if c.wire in wires]
+    if accums:
+        combos = [c for c in combos if c.accum in accums]
+    return combos
+
+
+def _fixture():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.train.dp_step import init_dp_state
+
+    if _FIXTURE:
+        return _FIXTURE
+    if jax.device_count() < N_DEV:
+        raise RuntimeError(
+            f"analysis lowering needs >= {N_DEV} devices but jax sees "
+            f"{jax.device_count()} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={N_DEV} before jax "
+            f"is imported (run via python -m repro.analysis.check)")
+    cfg = get_config("gpt2-60m").reduced()
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    comp = jax.eval_shape(init_dp_state, params)
+    toks = jax.ShapeDtypeStruct((4 * N_DEV, 16), jnp.int32)
+    _FIXTURE.update(
+        cfg=cfg, params=params, comp=comp,
+        batch={"tokens": toks, "labels": toks},
+        mesh=jax.make_mesh((N_DEV,), ("data",)))
+    return _FIXTURE
+
+
+def make_combo_optimizer(combo: Combo):
+    """The registry optimizer a combo lowers with."""
+    from repro.core import make_optimizer
+
+    config = {"lr_matrix": _LR}
+    if combo.engine == "single-pass":
+        config.update(shard_axis="data", shard_size=N_DEV)
+    else:
+        config.update(fused=True)
+    return make_optimizer(combo.optimizer, config)
+
+
+def _donated_leaves(params, opt_state) -> Tuple[DonatedLeaf, ...]:
+    """Flat HLO entry parameter numbers for the donated trees.  jit
+    flattens its arguments in order, so params' leaves take numbers
+    ``0..n-1`` and opt_state's the next ``m`` (donate_argnums=(0, 1))."""
+    from repro.core.types import tree_paths
+
+    out: List[DonatedLeaf] = []
+    num = 0
+    for prefix, tree in (("params", params), ("opt_state", opt_state)):
+        for path, leaf in tree_paths(tree):
+            out.append(DonatedLeaf(
+                param_number=num, path=f"{prefix}/{path}",
+                shape=tuple(leaf.shape), dtype=str(leaf.dtype)))
+            num += 1
+    return tuple(out)
+
+
+def lower_combo(combo: Combo, *, break_mode: Optional[str] = None) -> Artifacts:
+    """Build and lower one combo into :class:`Artifacts`.
+
+    ``break_mode`` deliberately degrades the step so tests can prove the
+    passes catch real regressions: ``"gather-momentum"`` all-gathers every
+    momentum shard back to the full bucket inside the step (memory +
+    sharding must fire); ``"drop-donation"`` lowers without
+    ``donate_argnums`` while still reporting the leaves as donated
+    (donation must fire)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.train.dp_step import make_dp_train_step
+
+    fx = _fixture()
+    opt = make_combo_optimizer(combo)
+    params, comp, batch = fx["params"], fx["comp"], fx["batch"]
+    opt_state = jax.eval_shape(opt.init, params)
+
+    kwargs = dict(compress=combo.compress, accum=combo.accum)
+    if combo.zero2:
+        kwargs.update(zero2=True, opt_state=opt_state, overlap=True)
+    base_step = make_dp_train_step(fx["cfg"], opt, fx["mesh"], **kwargs)
+
+    if break_mode == "gather-momentum":
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import bucket_specs
+
+        state_specs = bucket_specs(opt_state, fx["mesh"])
+
+        def step(p, s, c, b, t):
+            p2, s2, c2, m = base_step(p, s, c, b, t)
+
+            # the regression under test: reconstruct every momentum
+            # bucket on every rank after the update
+            def regather(v, spec):
+                if not any(ax == "data" for ax in spec):
+                    return v
+
+                def gather(shard):
+                    return jax.lax.all_gather(shard, "data", axis=0,
+                                              tiled=True)
+
+                return shard_map(gather, mesh=fx["mesh"], in_specs=spec,
+                                 out_specs=P(), check_rep=False)(v)
+
+            m = dict(m)
+            m["_gathered_momentum_norm"] = sum(
+                jnp.sum(regather(v, state_specs.buckets[k]).astype(
+                    jnp.float32) ** 2)
+                for k, v in s2.buckets.items())
+            return p2, s2, c2, m
+    else:
+        step = base_step
+
+    args = (params, opt_state, comp, batch, jnp.int32(0))
+    jaxpr = jax.make_jaxpr(step)(*args)
+    donate = () if break_mode == "drop-donation" else (0, 1)
+    hlo = jax.jit(step, donate_argnums=donate).lower(*args).compile().as_text()
+
+    meta = opt.state_meta(params) if opt.state_meta is not None else ()
+    return Artifacts(
+        combo=combo, jaxpr=jaxpr, hlo_text=hlo, buckets=tuple(meta),
+        donated=_donated_leaves(params, opt_state), n_dev=N_DEV,
+        overlap=combo.zero2)

@@ -141,7 +141,7 @@ class CheckpointManager:
                 f"checkpoint step {step} holds {len(man)} leaves but the "
                 f"restore template has {len(flat)} — different state "
                 f"structure (model / optimizer / compression mismatch?)")
-        for (path, leaf), m in zip(flat, man):
+        for (path, leaf), m in zip(flat, man, strict=False):
             if m["path"] != path:
                 raise ValueError(
                     f"checkpoint step {step}: tree mismatch — checkpoint "
@@ -173,8 +173,8 @@ class CheckpointManager:
         with np.load(d / "shard_00000.npz") as z:
             arrays = [z[f"leaf_{i}"] for i in range(len(manifest["leaves"]))]
         leaves, treedef = jax.tree_util.tree_flatten(like)
-        restored = [np.asarray(a).astype(l.dtype).reshape(l.shape)
-                    for a, l in zip(arrays, leaves)]
+        restored = [np.asarray(a).astype(leaf.dtype).reshape(leaf.shape)
+                    for a, leaf in zip(arrays, leaves, strict=False)]
         return (jax.tree_util.tree_unflatten(treedef, restored),
                 int(manifest["data_step"]))
 

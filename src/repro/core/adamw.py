@@ -17,7 +17,8 @@ class AdamWState(NamedTuple):
 def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95,
           eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
     def init(params):
-        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def z(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return AdamWState(mu=jax.tree_util.tree_map(z, params),
                           nu=jax.tree_util.tree_map(z, params))
 
@@ -35,8 +36,9 @@ def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95,
             return (-eta * (d + weight_decay * p.astype(jnp.float32))), mu_new, nu_new
 
         out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
-        pick = lambda i: jax.tree_util.tree_map(
-            lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        def pick(i):
+            return jax.tree_util.tree_map(
+                lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
         return pick(0), AdamWState(mu=pick(1), nu=pick(2))
 
     return Optimizer(init=init, update=update)

@@ -220,7 +220,7 @@ def gather_chunks(plan: BucketPlan, tree: PyTree, n_chunks: int,
         for j in range(n_chunks):
             lo, hi = j * csize, (j + 1) * csize
             pieces = []
-            for e, part in zip(b.entries, parts):
+            for e, part in zip(b.entries, parts, strict=False):
                 s, t = max(lo, e.offset), min(hi, e.offset + e.lead)
                 if s < t:
                     pieces.append(part[s - e.offset:t - e.offset])

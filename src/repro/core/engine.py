@@ -20,20 +20,43 @@ through one checkpoint / elastic-reshard / dp-step code path.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bucketing
 from repro.core.rules import MatrixUpdateRule
-from repro.core.types import Optimizer, PyTree, Schedule
+from repro.core.types import Optimizer, Schedule
 
 
 class BucketedState(NamedTuple):
     """Uniform bucketed optimizer state for the whole rule family."""
     buckets: Dict[str, jax.Array]
     slots: Dict[str, Dict[str, jax.Array]] = {}
+
+
+class BucketStateMeta(NamedTuple):
+    """Static per-bucket state metadata for external inspectors.
+
+    Everything ``repro.analysis`` needs to police a lowered step without
+    re-deriving the engine's layout: the full stacked momentum shape is
+    ``(padded, d_in, d_out)`` in ``momentum_dtype``; each slot stripe's
+    *full* (unsharded) shape/dtype comes from the rule's ``slot_shapes``;
+    ``leaf_shapes`` are the planned leaves so shape-collision heuristics
+    (a leaf as large as its bucket) can be applied uniformly."""
+    key: str
+    d_in: int
+    d_out: int
+    size: int
+    padded: int
+    momentum_dtype: str
+    slot_shapes: Dict[str, Tuple[Tuple[int, ...], str]]
+    leaf_shapes: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def full_shape(self) -> Tuple[int, int, int]:
+        return (self.padded, self.d_in, self.d_out)
 
 
 class BucketedEngine:
@@ -81,6 +104,21 @@ class BucketedEngine:
                     b.padded, b.d_in, b.d_out).items():
                 slots.setdefault(name, {})[b.key] = jnp.zeros(shape, dtype)
         return BucketedState(buckets=buckets, slots=slots)
+
+    def state_meta(self, params) -> Tuple[BucketStateMeta, ...]:
+        """Per-bucket :class:`BucketStateMeta` for ``params`` (same cached
+        plan the update fns use; pure metadata, no arrays touched)."""
+        plan = self.plan(params)
+        return tuple(
+            BucketStateMeta(
+                key=b.key, d_in=b.d_in, d_out=b.d_out, size=b.size,
+                padded=b.padded, momentum_dtype=str(self.mdtype),
+                slot_shapes={
+                    name: (tuple(shape), str(jnp.dtype(dtype)))
+                    for name, (shape, dtype) in self.rule.slot_shapes(
+                        b.padded, b.d_in, b.d_out).items()},
+                leaf_shapes=tuple(tuple(e.shape) for e in b.entries))
+            for b in plan.buckets)
 
     def scale(self, bucket: bucketing.Bucket, step):
         from repro.core.rmnp import rms_lr_scale
@@ -303,4 +341,5 @@ def matrix_optimizer(rule: MatrixUpdateRule, lr: Schedule, *,
                      update_apply=update_apply if fused_apply else None,
                      update_apply_sharded=update_apply_sharded if zero2 else None,
                      update_apply_bucket=update_apply_bucket if zero2 else None,
-                     bucket_plan=eng.plan, shard_size=shard_size)
+                     bucket_plan=eng.plan, shard_size=shard_size,
+                     state_meta=eng.state_meta)

@@ -195,8 +195,9 @@ def mixed_optimizer(
 
         paths_tree = map_with_path(lambda path, _: path, params)
         out = jax.tree_util.tree_map(upd, paths_tree, grads, state.momentum, state.nu, params)
-        pick = lambda i: jax.tree_util.tree_map(
-            lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        def pick(i):
+            return jax.tree_util.tree_map(
+                lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
         return pick(0), MixedState(momentum=pick(1), nu=pick(2))
 
     return Optimizer(init=init, update=update)
@@ -270,8 +271,9 @@ def _fused_mixed(rule: MatrixUpdateRule, lr_matrix: Schedule,
         paths_tree = map_with_path(lambda path, _: path, params)
         out = jax.tree_util.tree_map(upd_adam, paths_tree, grads,
                                      state.momentum, state.nu, params)
-        pick = lambda i: jax.tree_util.tree_map(
-            lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        def pick(i):
+            return jax.tree_util.tree_map(
+                lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
         return pick(0), pick(1), pick(2)
 
     def update(grads, state, params, step):
@@ -355,4 +357,5 @@ def _fused_mixed(rule: MatrixUpdateRule, lr_matrix: Schedule,
                      update_apply=update_apply if fused_apply else None,
                      update_apply_sharded=update_apply_sharded if zero2 else None,
                      update_apply_bucket=update_apply_bucket if zero2 else None,
-                     bucket_plan=eng.plan, shard_size=shard_size)
+                     bucket_plan=eng.plan, shard_size=shard_size,
+                     state_meta=eng.state_meta)

@@ -92,12 +92,12 @@ class MatrixUpdateRule:
     # two-pass form is w_new - w32, which re-associates the final add.
     additive = True
 
-    def slot_shapes(self, l: int, d_in: int,
+    def slot_shapes(self, rows: int, d_in: int,
                     d_out: int) -> Dict[str, Tuple[Tuple[int, ...], jnp.dtype]]:
         """Extra per-bucket state: slot name -> (shape, dtype) for a bucket
-        holding ``l`` stacked slices.  Shapes lead with ``l`` so slots shard
-        along ``L`` with the momentum."""
-        del l, d_in, d_out
+        holding ``rows`` stacked slices.  Shapes lead with ``rows`` so slots
+        shard along ``L`` with the momentum."""
+        del rows, d_in, d_out
         return {}
 
     def precondition(self, g: jax.Array, v: jax.Array,
@@ -178,9 +178,9 @@ class NorMuonRule(MuonRule):
 
     name = "normuon"
 
-    def slot_shapes(self, l, d_in, d_out):
+    def slot_shapes(self, rows, d_in, d_out):
         del d_in
-        return {"nu": ((l, 1, d_out), jnp.float32)}
+        return {"nu": ((rows, 1, d_out), jnp.float32)}
 
     def precondition(self, g, v, slots, *, step, use_kernel=False):
         o, v_new, _ = super().precondition(g, v, slots, step=step,
@@ -233,9 +233,9 @@ class NoraRule(MatrixUpdateRule):
 
     name = "nora"
 
-    def slot_shapes(self, l, d_in, d_out):
+    def slot_shapes(self, rows, d_in, d_out):
         del d_in
-        return {"r": ((l, 1, d_out), jnp.float32)}
+        return {"r": ((rows, 1, d_out), jnp.float32)}
 
     def precondition(self, g, v, slots, *, step, use_kernel=False):
         v32 = _ema32(g, v, self.beta)
@@ -295,7 +295,7 @@ def per_leaf_reference(rule: MatrixUpdateRule, lr: Schedule, *,
         new_s = {name: {} for name in state.slots}
         s_flat = {name: dict(tree_paths(state.slots[name]))
                   for name in state.slots}
-        for (path, g), (_, v), (_, p) in zip(g_flat, v_flat, p_flat):
+        for (path, g), (_, v), (_, p) in zip(g_flat, v_flat, p_flat, strict=False):
             scale = eta * rms_lr_scale(p.shape)
             sl = {name: s_flat[name][path] for name in s_flat}
             w_new, v_new, sl_new = rule.apply(
@@ -305,9 +305,10 @@ def per_leaf_reference(rule: MatrixUpdateRule, lr: Schedule, *,
             new_v[path] = v_new.reshape(v.shape)
             for name in sl_new:
                 new_s[name][path] = sl_new[name]
-        rebuild = lambda tmpl, vals: jax.tree_util.tree_unflatten(
-            jax.tree_util.tree_structure(tmpl),
-            [vals[path] for path, _ in tree_paths(tmpl)])
+        def rebuild(tmpl, vals):
+            return jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(tmpl),
+                [vals[path] for path, _ in tree_paths(tmpl)])
         return (rebuild(params, new_p),
                 PerLeafRefState(
                     momentum=rebuild(state.momentum, new_v),

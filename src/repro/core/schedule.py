@@ -3,9 +3,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.types import Schedule
+
 
 def cosine_with_warmup(peak_lr: float, total_steps: int,
-                       warmup_frac: float = 0.1, min_ratio: float = 0.0):
+                       warmup_frac: float = 0.1,
+                       min_ratio: float = 0.0) -> Schedule:
     warmup_steps = max(1, int(total_steps * warmup_frac))
 
     def schedule(step):
@@ -18,7 +21,7 @@ def cosine_with_warmup(peak_lr: float, total_steps: int,
     return schedule
 
 
-def constant(lr: float):
+def constant(lr: float) -> Schedule:
     def schedule(step):
         return jnp.full((), lr, jnp.float32)
     return schedule

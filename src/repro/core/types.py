@@ -62,6 +62,12 @@ class Optimizer:
     # validates it against the mesh axis up front — a mismatch otherwise
     # surfaces as a shape error deep inside bucket_update_apply.
     shard_size: int = 1
+    # params -> tuple of repro.core.engine.BucketStateMeta: static
+    # per-bucket state-layout metadata (momentum + slot-stripe full shapes
+    # and dtypes).  Consumed by repro.analysis to police lowered steps for
+    # full-bucket materialization / silent state replication; None for
+    # optimizers with no bucketed state (per-leaf AdamW, references).
+    state_meta: Optional[Callable[[PyTree], Any]] = None
 
 
 class MixedState(NamedTuple):

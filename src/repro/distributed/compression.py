@@ -141,8 +141,9 @@ def compressed_mean(grads: PyTree, state: CompressionState, axis_name: str,
         return compressed_mean_leaf(g, e, axis_name, n_dev)
 
     out = jax.tree_util.tree_map_with_path(leaf, grads, state.error)
-    pick = lambda i: jax.tree_util.tree_map(
-        lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    def pick(i):
+        return jax.tree_util.tree_map(
+            lambda x: x[i], out, is_leaf=lambda x: isinstance(x, tuple))
     return pick(0), CompressionState(error=pick(1))
 
 

@@ -103,7 +103,7 @@ def spec_for(shape: Sequence[int], names: Sequence[LogicalAxis],
         return P()
     assert len(shape) == len(names), (shape, names)
     used: set = set()
-    return P(*[_resolve_axis(n, d, mesh, rules, used) for d, n in zip(shape, names)])
+    return P(*[_resolve_axis(n, d, mesh, rules, used) for d, n in zip(shape, names, strict=False)])
 
 
 def logical(x: jax.Array, names: Sequence[LogicalAxis]) -> jax.Array:

@@ -104,9 +104,9 @@ def matmul3(a, b, *, bm: int = 256, bn: int = 256, bk: int = 256,
     out = pl.pallas_call(
         functools.partial(_kernel3, n_k=grid[3]),
         grid=grid,
-        in_specs=[pl.BlockSpec((1, bm, bk), lambda l, i, j, kk: (l, i, kk)),
-                  pl.BlockSpec((1, bk, bn), lambda l, i, j, kk: (l, kk, j))],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda l, i, j, kk: (l, i, j)),
+        in_specs=[pl.BlockSpec((1, bm, bk), lambda b, i, j, kk: (b, i, kk)),
+                  pl.BlockSpec((1, bk, bn), lambda b, i, j, kk: (b, kk, j))],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, kk: (b, i, j)),
         out_shape=jax.ShapeDtypeStruct((L, M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,

@@ -61,9 +61,9 @@ def ns_step3(x, a: float, b: float, c: float, interpret: bool = False):
     poly = pl.pallas_call(
         functools.partial(_poly_kernel3, b=b, c=c),
         grid=(L, max(1, m // bm)),
-        in_specs=[pl.BlockSpec((1, bm, m), lambda l, i: (l, i, 0)),
-                  pl.BlockSpec((1, bm, m), lambda l, i: (l, i, 0))],
-        out_specs=pl.BlockSpec((1, bm, m), lambda l, i: (l, i, 0)),
+        in_specs=[pl.BlockSpec((1, bm, m), lambda b, i: (b, i, 0)),
+                  pl.BlockSpec((1, bm, m), lambda b, i: (b, i, 0))],
+        out_specs=pl.BlockSpec((1, bm, m), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((L, m, m), jnp.float32),
         interpret=interpret,
     )(g, gg)

@@ -85,7 +85,7 @@ def chunked_attention_ref(q, k, v, *, causal: bool = True,
         qb = qr[:, qi].astype(jnp.float32)
         acc = jnp.zeros((B, K, G, cq, hdv), jnp.float32)
         m = jnp.full((B, K, G, cq), -1e30, jnp.float32)
-        l = jnp.zeros((B, K, G, cq), jnp.float32)
+        ell = jnp.zeros((B, K, G, cq), jnp.float32)
         hi = ((qi + 1) * cq + ck - 1) // ck if causal else nk
         for ki in range(hi):
             kb = kr[:, ki].astype(jnp.float32)
@@ -99,10 +99,10 @@ def chunked_attention_ref(q, k, v, *, causal: bool = True,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = l * corr + jnp.sum(p, axis=-1)
+            ell = ell * corr + jnp.sum(p, axis=-1)
             acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskh->bkgqh", p, vb)
             m = m_new
-        out = acc / (l[..., None] + 1e-30)
+        out = acc / (ell[..., None] + 1e-30)
         outs.append(jnp.transpose(out, (0, 3, 1, 2, 4)))  # (B,cq,K,G,hdv)
     return (jnp.concatenate(outs, axis=1)
             .reshape(B, S, H, hdv).astype(q.dtype))

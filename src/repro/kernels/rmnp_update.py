@@ -89,7 +89,7 @@ def _stripe_call(kernel, operands, out_dtypes, *, block_n: int, stripes: int,
         ops3 = [jnp.pad(o, ((0, 0), (0, 0), (0, pad))) for o in ops3]
     n_p = n + pad
     grid = (L, n_p // bn)
-    spec = pl.BlockSpec((1, d_in, bn), lambda l, j: (l, 0, j))
+    spec = pl.BlockSpec((1, d_in, bn), lambda b, j: (b, 0, j))
     in_specs = [spec] * len(ops3)
     if scalars is not None:
         in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)] + in_specs

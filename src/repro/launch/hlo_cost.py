@@ -22,6 +22,11 @@ counter compared against an ``s32[] constant(N)``; we take the max integer
 constant found there (fallback 1).  Everything is resolved lazily with
 memoization, so a 62-layer 512-way SPMD module (tens of MB of text) parses
 in a few seconds.
+
+The HLO text parser itself lives in :mod:`repro.analysis.hlo` (shared with
+the static-analysis passes); this module is a consumer.  The historical
+names (``parse_module``, ``shape_bytes``, ``Op``, ``Computation``,
+``collective_overlap_report``, ...) are re-exported for compatibility.
 """
 from __future__ import annotations
 
@@ -29,148 +34,13 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-# ---------------------------------------------------------------------------
-# shapes
-# ---------------------------------------------------------------------------
-
-_DTYPE_BYTES = {
-    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
-    "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1,
-    "u4": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
-    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
-}
-
-_SHAPE_RE = re.compile(
-    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
-
-
-def _dims(dim_str: str) -> List[int]:
-    return [int(d) for d in dim_str.split(",") if d.strip()]
-
-
-def shape_bytes(type_str: str) -> int:
-    """Total bytes of all array shapes in a type string (tuples summed)."""
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        n = 1
-        for d in _dims(m.group(2)):
-            n *= d
-        total += n * _DTYPE_BYTES[m.group(1)]
-    return total
-
-
-def shape_elems(type_str: str) -> int:
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        n = 1
-        for d in _dims(m.group(2)):
-            n *= d
-        total += n
-    return total
-
-
-def first_shape_dims(type_str: str) -> List[int]:
-    m = _SHAPE_RE.search(type_str)
-    return _dims(m.group(2)) if m else []
-
-
-# ---------------------------------------------------------------------------
-# parsing
-# ---------------------------------------------------------------------------
-
-@dataclass
-class Op:
-    name: str
-    type_str: str       # result type, e.g. "f32[8,16]{1,0}" or "(s32[], ...)"
-    opcode: str
-    operands: List[str]  # %-names referenced in the operand list
-    attrs: str           # everything after the closing paren of operands
-    raw: str
-
-
-@dataclass
-class Computation:
-    name: str
-    ops: List[Op] = field(default_factory=list)
-    symtab: Dict[str, str] = field(default_factory=dict)  # %name -> type_str
-
-
-_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.+\s+\{\s*$")
-_OP_LINE = re.compile(r"^\s+(ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
-_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
-_PCT_NAME = re.compile(r"%([\w.\-]+)")
-_INT_CONST = re.compile(r"\b[su]\d+\[\]\s+constant\((\d+)\)")
-
-
-def _split_type_opcode(rest: str) -> Tuple[str, str, str, str]:
-    """rest = '<type> <opcode>(<operands>)<attrs>'.  The type may be a
-    parenthesized tuple, so scan balanced parens from the left."""
-    rest = rest.strip()
-    i = 0
-    if rest.startswith("("):
-        depth = 0
-        for j, ch in enumerate(rest):
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                depth -= 1
-                if depth == 0:
-                    i = j + 1
-                    break
-    type_end = rest.find(" ", i)
-    if type_end < 0:
-        return rest, "", "", ""
-    type_str = rest[:type_end]
-    tail = rest[type_end + 1:]
-    p = tail.find("(")
-    if p < 0:
-        return type_str, tail.strip(), "", ""
-    opcode = tail[:p].strip()
-    depth = 0
-    end = len(tail)
-    for j in range(p, len(tail)):
-        if tail[j] == "(":
-            depth += 1
-        elif tail[j] == ")":
-            depth -= 1
-            if depth == 0:
-                end = j
-                break
-    operand_str = tail[p + 1:end]
-    attrs = tail[end + 1:]
-    return type_str, opcode, operand_str, attrs
-
-
-def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
-    comps: Dict[str, Computation] = {}
-    entry: Optional[str] = None
-    cur: Optional[Computation] = None
-    for line in text.splitlines():
-        if cur is None:
-            m = _COMP_HDR.match(line)
-            if m:
-                cur = Computation(name=m.group(2))
-                if m.group(1):
-                    entry = m.group(2)
-            continue
-        if line.startswith("}"):
-            comps[cur.name] = cur
-            cur = None
-            continue
-        m = _OP_LINE.match(line)
-        if not m:
-            continue
-        name, rest = m.group(2), m.group(3)
-        type_str, opcode, operand_str, attrs = _split_type_opcode(rest)
-        operands = _OPERAND_NAME.findall(operand_str)
-        op = Op(name=name, type_str=type_str, opcode=opcode,
-                operands=operands, attrs=attrs, raw=line)
-        cur.ops.append(op)
-        cur.symtab[name] = type_str
-    if cur is not None:  # unterminated (defensive)
-        comps[cur.name] = cur
-    return comps, entry
-
+from repro.analysis.hlo import (  # noqa: F401  (compat re-exports)
+    _BODY_RE, _BRANCHES_RE, _CALLS_RE, _COND_RE, _INT_CONST, _PCT_NAME,
+    _TO_APPLY_RE, _TRUE_COMP_RE, Computation, Op, _dims, first_shape_dims,
+    group_size as _group_size, parse_module, shape_bytes, shape_elems,
+)
+from repro.analysis.hlo import COLLECTIVES as _COLLECTIVES  # noqa: F401
+from repro.analysis.overlap import collective_overlap_report  # noqa: F401
 
 # ---------------------------------------------------------------------------
 # cost model
@@ -196,18 +66,7 @@ _NO_TRAFFIC = {
     "opt-barrier", "add-dependency",
 }
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
-_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _DIMS_ATTR_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
-_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
-_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
-_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
-_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-_TRUE_COMP_RE = re.compile(r"true_computation=%?([\w.\-]+)")
-_FALSE_COMP_RE = re.compile(r"false_computation=%?([\w.\-]+)")
 
 
 @dataclass
@@ -233,17 +92,6 @@ class Cost:
     @property
     def collective_wire_bytes(self) -> float:
         return sum(v["wire_bytes"] for v in self.coll.values())
-
-
-def _group_size(attrs: str, default: int) -> int:
-    m = _GROUPS_RE.search(attrs)
-    if m:
-        ids = [x for x in m.group(1).split(",") if x.strip()]
-        return max(1, len(ids))
-    m = _GROUPS_V2_RE.search(attrs)
-    if m:  # iota format [num_groups, group_size]
-        return max(1, int(m.group(2)))
-    return default
 
 
 def _wire_bytes(op: str, result_bytes: int, g: int) -> float:
@@ -532,127 +380,6 @@ def analyze_hlo(text: str, default_group: int = 1) -> Dict:
         "bytes_accessed": cost.bytes,
         "collectives": cost.coll,
         "collective_wire_bytes": cost.collective_wire_bytes,
-    }
-
-
-def collective_overlap_report(text: str, buckets) -> Dict:
-    """Verify the bucket-pipelined ZeRO-2 structure in compiled HLO: no
-    bucket's gradient collective may data-depend on another bucket's update
-    output — that is the dependence that would serialize communication
-    behind compute and defeat the latency-hiding scheduler.
-
-    ``buckets``: iterable of ``(key, d_in, d_out)`` (e.g. from
-    ``BucketPlan.buckets``).  Ops are classified by opcode + result shape:
-
-    * *gradient collectives* — ``reduce-scatter`` / ``all-to-all`` ops
-      (sync or ``-start`` async form; int8 a2a included).  A rank-3 result
-      whose trailing dims match a bucket is attributed to it; int8/flat
-      operands stay unattributed but are still checked.
-    * *update outputs* — ``all-gather`` ops whose result trailing dims
-      match a bucket (the updated-weight gather of
-      ``bucket_update_apply_sharded``).  Flat bf16 gathers (the rest-leaf
-      compressed-mean stage) don't match and are ignored.
-
-    A *serialization edge* is (update-gather U, collective C) with U a
-    transitive ancestor of C.  Ancestry is computed over operand edges in
-    every computation, flowing through ``fusion`` / ``call`` / ``while`` /
-    ``conditional`` ops into their called computations (conservative: any
-    op inside a called computation is an ancestor of the caller's result).
-
-    Returns ``{"collectives": [...], "update_gathers": [...],
-    "serialization_edges": [(u, c, bucket_u, bucket_c), ...],
-    "n_serialization_edges": int}``.
-    """
-    comps, entry = parse_module(text)
-    by_shape = {}
-    for b in buckets:
-        key, d_in, d_out = b[0], int(b[1]), int(b[2])
-        by_shape[(d_in, d_out)] = key
-
-    def bucket_of(type_str: str):
-        dims = first_shape_dims(type_str)
-        if len(dims) >= 2:
-            return by_shape.get((dims[-2], dims[-1]))
-        return None
-
-    _CALLED_RES = (_CALLS_RE, _BODY_RE, _COND_RE, _TO_APPLY_RE,
-                   _TRUE_COMP_RE, _FALSE_COMP_RE)
-
-    def called_comps(op: Op) -> List[str]:
-        names = []
-        for rx in _CALLED_RES:
-            m = rx.search(op.attrs)
-            if m:
-                names.append(m.group(1))
-        m = _BRANCHES_RE.search(op.attrs)
-        if m:
-            names += _PCT_NAME.findall(m.group(1))
-        return [n for n in names if n in comps]
-
-    # index ops, classify
-    collectives, gathers = [], []
-    for comp in comps.values():
-        for op in comp.ops:
-            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
-            if op.opcode.endswith("-done"):
-                continue
-            if base in ("reduce-scatter", "all-to-all"):
-                collectives.append((comp.name, op, bucket_of(op.type_str)))
-            elif base == "all-gather":
-                bk = bucket_of(op.type_str)
-                if bk is not None:
-                    gathers.append((comp.name, op, bk))
-
-    # forward data-flow graph over (computation, op) nodes: value -> its
-    # consumers.  Called computations are linked in BOTH directions — every
-    # op of a called computation feeds the caller op's result, and the
-    # caller op feeds every op of its called computations — so an edge
-    # survives a hop into a fusion/while/conditional body in either role
-    # (an update gather feeding a loop whose body holds a collective is
-    # still a serialization edge).  Conservative: flowing through a caller
-    # op reaches the whole body, not just the operand's true users.  Built
-    # once, walked iteratively — HLO operand chains run tens of thousands
-    # of ops deep, far past Python's recursion limit.
-    consumers: Dict[Tuple[str, str], List[Tuple[str, str]]] = {}
-    for comp in comps.values():
-        defs = {o.name for o in comp.ops}
-        for op in comp.ops:
-            node = (comp.name, op.name)
-            for dep in op.operands:
-                if dep in defs:
-                    consumers.setdefault((comp.name, dep), []).append(node)
-            for sub in called_comps(op):
-                subc = comps.get(sub)
-                if subc is not None:
-                    for o2 in subc.ops:
-                        consumers.setdefault((sub, o2.name), []).append(node)
-                        consumers.setdefault(node, []).append((sub, o2.name))
-
-    coll_ids = {(cname, op.name): (op.name, bk)
-                for cname, op, bk in collectives}
-    edges = []
-    for cname, op, bk in gathers:  # BFS descendants of each update gather
-        seen = {(cname, op.name)}
-        frontier = [(cname, op.name)]
-        while frontier:
-            node = frontier.pop()
-            for nxt in consumers.get(node, ()):
-                if nxt in seen:
-                    continue
-                seen.add(nxt)
-                frontier.append(nxt)
-                hit = coll_ids.get(nxt)
-                if hit is not None:
-                    edges.append((op.name, hit[0], bk, hit[1]))
-    return {
-        "collectives": [
-            {"name": op.name, "opcode": op.opcode, "bucket": bk,
-             "computation": cname} for cname, op, bk in collectives],
-        "update_gathers": [
-            {"name": op.name, "opcode": op.opcode, "bucket": bk,
-             "computation": cname} for cname, op, bk in gathers],
-        "serialization_edges": edges,
-        "n_serialization_edges": len(edges),
     }
 
 

@@ -29,7 +29,6 @@ from repro.core import cosine_with_warmup, mixed_optimizer
 from repro.distributed.sharding import axis_rules
 from repro.launch import mesh as mesh_lib
 from repro.launch.hlo_cost import analyze_hlo
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.launch.roofline import roofline_row
 from repro.launch.specs import input_specs
 from repro.train.step import make_prefill_step, make_serve_step, make_train_step
@@ -133,7 +132,7 @@ def run(arch, shape_name, tag, save_hlo=False, profile=False, **kw):
         for k, v in sorted(agg.items(), key=lambda kv: -kv[1])[:10]:
             print(f"  {k:25s} {v / 2**30:10.1f}")
         print("-- top traffic ops --")
-        for b, oc, raw in top:
+        for b, _oc, raw in top:
             print(f"  {b / 2**30:9.1f} GiB  {raw[:150]}")
         coll = hc["collectives"]
         print("-- collectives (wire GiB) --")

@@ -17,7 +17,6 @@ import json
 import math
 from pathlib import Path
 
-from repro.configs import get_config
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"

@@ -24,7 +24,8 @@ def _sds(shape, dtype):
 
 def _from_specs(specs, mesh: Mesh, default_dtype) -> Tuple[Any, Any]:
     """(SDS tree, NamedSharding tree) from a ParamSpec tree."""
-    is_spec = lambda x: isinstance(x, ParamSpec)
+    def is_spec(x):
+        return isinstance(x, ParamSpec)
     sds = jax.tree_util.tree_map(
         lambda sp: _sds(sp.shape, sp.dtype or default_dtype), specs, is_leaf=is_spec)
     sh = jax.tree_util.tree_map(
@@ -60,7 +61,8 @@ def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
     """Training / prefill batch inputs."""
     B, S = shape.global_batch, shape.seq_len
     batch_axes = ("batch",)
-    sh = lambda shp, names: NamedSharding(mesh, spec_for(shp, names, mesh))
+    def sh(shp, names):
+        return NamedSharding(mesh, spec_for(shp, names, mesh))
     out_sds: Dict[str, Any] = {}
     out_sh: Dict[str, Any] = {}
     if cfg.frontend == "audio_frames":

@@ -8,7 +8,7 @@ times bounded at 62-layer scale.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -105,7 +105,7 @@ def _tree_materialize(specs, key, dtype):
     leaves, treedef = jax.tree_util.tree_flatten(
         specs, is_leaf=lambda x: isinstance(x, L.ParamSpec))
     keys = jax.random.split(key, len(leaves))
-    vals = [L.materialize(sp, k, dtype) for sp, k in zip(leaves, keys)]
+    vals = [L.materialize(sp, k, dtype) for sp, k in zip(leaves, keys, strict=False)]
     return jax.tree_util.tree_unflatten(treedef, vals)
 
 

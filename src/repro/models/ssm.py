@@ -56,7 +56,8 @@ def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
 def mamba_cache_specs(cfg: ModelConfig, batch: int, seq: int):
     d_inner, _, d_state, d_conv = _mamba_dims(cfg)
     return {
-        "h": ParamSpec((batch, d_inner, d_state), ("batch", "d_inner", "state"), "zeros", dtype="float32"),
+        "h": ParamSpec((batch, d_inner, d_state), ("batch", "d_inner", "state"),
+                       "zeros", dtype="float32"),
         "conv": ParamSpec((batch, d_conv - 1, d_inner), ("batch", None, "d_inner"), "zeros"),
     }
 
@@ -177,7 +178,8 @@ def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
 def mlstm_cache_specs(cfg: ModelConfig, batch: int, seq: int):
     _, H, hd = _mlstm_dims(cfg)
     return {
-        "C": ParamSpec((batch, H, hd, hd), ("batch", "heads", None, None), "zeros", dtype="float32"),
+        "C": ParamSpec((batch, H, hd, hd), ("batch", "heads", None, None),
+                       "zeros", dtype="float32"),
         "n": ParamSpec((batch, H, hd), ("batch", "heads", None), "zeros", dtype="float32"),
     }
 
@@ -190,7 +192,8 @@ def _mlstm_chunk_scan(q, k, v, log_f, i_gate, C0, n0, chunk: int):
     if S % Cn:
         Cn = S  # non-divisible (smoke shapes): single chunk
     nC = S // Cn
-    r = lambda t: jnp.moveaxis(t.reshape(B, nC, Cn, *t.shape[2:]), 1, 0)
+    def r(t):
+        return jnp.moveaxis(t.reshape(B, nC, Cn, *t.shape[2:]), 1, 0)
     qs, ks, vs, lfs, igs = map(r, (q, k, v, log_f, i_gate))
     scale = 1.0 / (hd ** 0.5)
 

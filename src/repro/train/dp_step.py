@@ -56,8 +56,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import apply_updates, clip_by_global_norm
@@ -153,7 +153,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
         grads, comp_state, matrix paths)."""
         plan = opt.bucket_plan(grads)
         mat = plan.paths
-        skip = lambda path: path in mat
+        def skip(path):
+            return path in mat
         g_shards = {}
         if compress:
             # fold the rank-local error accumulator in before chunking; the

@@ -262,7 +262,8 @@ def make_pipelined_zero2_step(cfg: ModelConfig, opt: Optimizer, *,
         # its own accumulated chunks (+ the shared error state), never on
         # another bucket's update
         g_shards = {}
-        skip = lambda path: path in mat
+        def skip(path):
+            return path in mat
         if compress:
             v_chunks = fold_error_chunks(plan, chunk_means, comp_state, n_dev)
             resid = {}

@@ -8,8 +8,7 @@ decode_* / prefill_* shapes lower.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +28,9 @@ def optimizer_launches(opt: Optimizer, params, step: int = 0) -> int:
     compiled or executed."""
     from repro.kernels.ops import count_pallas_calls
 
-    abstract = lambda t: jax.tree_util.tree_map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    def abstract(t):
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
     state = jax.eval_shape(opt.init, params)
     fn = opt.update_apply if opt.update_apply is not None else opt.update
     return count_pallas_calls(
@@ -45,8 +45,9 @@ def optimizer_fp32_buffers(opt: Optimizer, params, shape,
     two-pass engine does."""
     from repro.kernels.ops import count_buffer_eqns
 
-    abstract = lambda t: jax.tree_util.tree_map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    def abstract(t):
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
     state = jax.eval_shape(opt.init, params)
     fn = opt.update_apply if opt.update_apply is not None else opt.update
     return count_buffer_eqns(fn, shape, jnp.float32, abstract(params), state,

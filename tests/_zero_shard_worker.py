@@ -210,7 +210,7 @@ def dp_step_two_way():
     step_rep = jax.jit(make_dp_train_step(cfg, opt_rep, mesh, compress=False))
     p1, s1, _, m1 = step_sh(params, st_sh, comp, batch, jnp.int32(0))
     p2, s2, _, _ = step_rep(params, st_rep, comp, batch, jnp.int32(0))
-    for (k, a), (_, b) in zip(tree_paths(p1), tree_paths(p2)):
+    for (k, a), (_, b) in zip(tree_paths(p1), tree_paths(p2), strict=False):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32), err_msg=k)
     assert np.isfinite(float(np.asarray(m1["loss"])))
@@ -260,7 +260,7 @@ def dp_step_two_way_zero2():
                                           clip_norm=1e6))
     p1, s1, _, m1 = step_z2(params, st_z2, comp, batch, jnp.int32(0))
     p2, _, _, _ = step_rep(params, st_rep, comp, batch, jnp.int32(0))
-    for (k, a), (_, b) in zip(tree_paths(p1), tree_paths(p2)):
+    for (k, a), (_, b) in zip(tree_paths(p1), tree_paths(p2), strict=False):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32),
                                       err_msg=f"zero2: {k}")
@@ -345,7 +345,7 @@ def dp_step_pipelined_four_way():
     p_rep, _, _, m_rep = run(make_dp_train_step(
         cfg, opt_rep, mesh, compress=False, clip_norm=1e6),
         opt_rep.init(params))
-    for (k, a), (_, b) in zip(tree_paths(p1), tree_paths(p_rep)):
+    for (k, a), (_, b) in zip(tree_paths(p1), tree_paths(p_rep), strict=False):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32),
                                       err_msg=f"pipelined accum=1: {k}")
@@ -363,11 +363,11 @@ def dp_step_pipelined_four_way():
     p4s, _, _, _ = run(make_dp_train_step(
         cfg, opt, mesh, zero2=True, opt_state=st, compress=False,
         clip_norm=1e6, accum=4, overlap=False), st)
-    for (k, a), (_, b) in zip(tree_paths(p4), tree_paths(p4s)):
+    for (k, a), (_, b) in zip(tree_paths(p4), tree_paths(p4s), strict=False):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32),
                                       err_msg=f"pipelined vs serialized: {k}")
-    for (k, a), (_, b) in zip(tree_paths(p4), tree_paths(p1)):
+    for (k, a), (_, b) in zip(tree_paths(p4), tree_paths(p1), strict=False):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=2e-4, atol=2e-6,
@@ -381,7 +381,7 @@ def dp_step_pipelined_four_way():
     pcs, _, _, _ = run(make_dp_train_step(
         cfg, opt, mesh, zero2=True, opt_state=st, compress=True, accum=4,
         overlap=False), st)
-    for (k, a), (_, b) in zip(tree_paths(pc), tree_paths(pcs)):
+    for (k, a), (_, b) in zip(tree_paths(pc), tree_paths(pcs), strict=False):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32),
                                       err_msg=f"int8 pipelined: {k}")

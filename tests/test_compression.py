@@ -4,7 +4,6 @@ shard_map'd compressed DP step (degenerate 1-device mesh on CPU; the
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_support import given, settings, st
 
 from repro.distributed.compression import (

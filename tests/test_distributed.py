@@ -61,7 +61,7 @@ class TestElastic:
                 "b": {"c": jnp.ones((5,))}}
         out = reshard(tree, mesh)
         for l1, l2 in zip(jax.tree_util.tree_leaves(tree),
-                          jax.tree_util.tree_leaves(out)):
+                          jax.tree_util.tree_leaves(out), strict=False):
             np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
 
     def test_restart_on_smaller_stream_partition(self):
@@ -78,7 +78,7 @@ class TestElastic:
         # determinism (not concatenation equality) is the contract
         again = [make_stream(cfg, 16, 8, seed=5, host_id=h,
                              num_hosts=2).sample(step=7) for h in range(2)]
-        for p, a in zip(parts, again):
+        for p, a in zip(parts, again, strict=False):
             np.testing.assert_array_equal(p["tokens"], a["tokens"])
         assert b_full["tokens"].shape[0] == 8
         assert parts[0]["tokens"].shape[0] == 4
@@ -122,7 +122,7 @@ class TestAttentionImplEquivalence:
                                       attn_chunk_k=8)
             gs[impl] = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
         for a, b in zip(jax.tree_util.tree_leaves(gs["dense"]),
-                        jax.tree_util.tree_leaves(gs["chunked"])):
+                        jax.tree_util.tree_leaves(gs["chunked"]), strict=False):
             np.testing.assert_allclose(np.asarray(a, np.float32),
                                        np.asarray(b, np.float32),
                                        atol=1e-4, rtol=1e-3)

@@ -173,8 +173,9 @@ class TestNoFp32Intermediate:
 
         def pallas_fp32_outputs(opt, fn_name):
             fn = getattr(opt, fn_name)
-            abstract = lambda t: jax.tree_util.tree_map(
-                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+            def abstract(t):
+                return jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
             state = jax.eval_shape(opt.init, params)
             closed = jax.make_jaxpr(fn)(abstract(params), state,
                                         abstract(params), jnp.int32(0))
@@ -430,7 +431,8 @@ class TestPlanCache:
 
         cache = PlanCache(maxsize=2)
         builds = []
-        get = lambda k: cache.get(k, lambda: builds.append(k) or k)
+        def get(k):
+            return cache.get(k, lambda: builds.append(k) or k)
         assert get("a") == "a" and get("b") == "b"
         assert get("a") == "a"          # hit: refreshes 'a'
         get("c")                        # evicts 'b' (LRU), not 'a'
@@ -448,7 +450,8 @@ class TestPlanCache:
         cache = PlanCache()
         assert cache.maxsize == 8
         builds = []
-        get = lambda k: cache.get(k, lambda: builds.append(k) or k)
+        def get(k):
+            return cache.get(k, lambda: builds.append(k) or k)
         for k in "abcdefgh":
             get(k)
         assert len(cache) == 8
@@ -547,6 +550,6 @@ class TestTrainStepDispatch:
             outs[name] = step(params, opt.init(params), batch, jnp.int32(0))
         from repro.core.types import tree_paths
         for (k, a), (_, b) in zip(tree_paths(outs["two"][0]),
-                                  tree_paths(outs["one"][0])):
+                                  tree_paths(outs["one"][0]), strict=False):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=k)

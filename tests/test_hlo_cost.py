@@ -16,7 +16,8 @@ def _analyze(fn, *sds):
     return analyze_hlo(jax.jit(fn).lower(*sds).compile().as_text())
 
 
-F32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+def F32(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
 
 
 def test_plain_matmul_flops_exact():

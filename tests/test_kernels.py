@@ -164,7 +164,7 @@ class TestFlashAttentionKernel:
 
         g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
         g2 = jax.grad(f_dense, argnums=(0, 1, 2))(q, k, v)
-        for a, b in zip(g1, g2):
+        for a, b in zip(g1, g2, strict=False):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        atol=1e-4, rtol=1e-4)
 

@@ -95,8 +95,8 @@ class TestMixedRouting:
             s = opt.init(params)
             upd, s2 = opt.update(g, s, params, 0)
             p2 = apply_updates(params, upd)
-            for l in jax.tree_util.tree_leaves(p2):
-                assert np.all(np.isfinite(np.array(l)))
+            for leaf in jax.tree_util.tree_leaves(p2):
+                assert np.all(np.isfinite(np.array(leaf)))
 
     def test_momentum_accumulates(self):
         params = {"w": jnp.zeros((4, 4))}
@@ -203,6 +203,6 @@ class TestStateMemoryParity:
         for kind in ("rmnp", "muon"):
             opt = mixed_optimizer(kind, constant(0.1), constant(0.1))
             st = opt.init(params)
-            sizes[kind] = sum(l.size * l.dtype.itemsize
-                              for l in jax.tree_util.tree_leaves(st))
+            sizes[kind] = sum(leaf.size * leaf.dtype.itemsize
+                              for leaf in jax.tree_util.tree_leaves(st))
         assert sizes["rmnp"] == sizes["muon"]

@@ -86,7 +86,7 @@ class TestMicrobatchGrads:
         for k in c1:
             np.testing.assert_allclose(np.asarray(c2[k]), np.asarray(c1[k]),
                                        rtol=2e-4, atol=2e-6, err_msg=k)
-        for (k, a), (_, b) in zip(tree_paths(rest2), tree_paths(rest1)):
+        for (k, a), (_, b) in zip(tree_paths(rest2), tree_paths(rest1), strict=False):
             if k in mat:
                 assert a.shape == (1,) * np.asarray(b).ndim, (k, a.shape)
             else:
@@ -171,7 +171,7 @@ class TestDpStepPipelined:
                 accum=2, overlap=overlap))
             outs[overlap] = step(params, st, comp, batch, jnp.int32(0))
         for (k, a), (_, b) in zip(tree_paths(outs[True][0]),
-                                  tree_paths(outs[False][0])):
+                                  tree_paths(outs[False][0]), strict=False):
             np.testing.assert_array_equal(np.asarray(a, np.float32),
                                           np.asarray(b, np.float32),
                                           err_msg=k)
@@ -245,9 +245,10 @@ class TestUpdateApplyBucketContract:
                     0, clip)
             return scatter(plan, w_b, p, cast=True), v_b
 
-        run = lambda fn: jax.jit(shard_map(
-            fn, mesh=mesh, in_specs=(P(), P(), P()), out_specs=(P(), P()),
-            check_rep=False))(grads, state, params)
+        def run(fn):
+            return jax.jit(shard_map(
+                fn, mesh=mesh, in_specs=(P(), P(), P()), out_specs=(P(), P()),
+                check_rep=False))(grads, state, params)
         p_ref, s_ref = run(via_sharded)
         p_bkt, v_bkt = run(via_bucket)
         for k in p_ref:

@@ -205,7 +205,7 @@ class TestStateCheckpointRoundTrip:
         assert out is not None
         restored, step, _ = out
         assert step == 1
-        for (ka, a), (kb, b) in zip(tree_paths(restored), tree_paths(state)):
+        for (ka, a), (kb, b) in zip(tree_paths(restored), tree_paths(state), strict=False):
             assert ka == kb
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=f"{name}: {ka}")
@@ -227,6 +227,6 @@ class TestStateCheckpointRoundTrip:
         mgr.save(2, state)
         restored, step, _ = mgr.restore_latest(state)
         assert step == 2
-        for (ka, a), (_, b) in zip(tree_paths(restored), tree_paths(state)):
+        for (ka, a), (_, b) in zip(tree_paths(restored), tree_paths(state), strict=False):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=ka)

@@ -4,7 +4,6 @@ dominance grows), serving pipeline generates coherently."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.launch.train import train
@@ -51,7 +50,7 @@ class TestEndToEndTraining:
 
 class TestServing:
     def test_prefill_then_greedy_decode(self):
-        from repro.models import forward, init_cache, init_params
+        from repro.models import init_cache, init_params
         from repro.train.step import make_prefill_step, make_serve_step
         cfg = get_config("qwen3-4b").reduced()
         params = init_params(cfg, jax.random.PRNGKey(0))

@@ -12,10 +12,12 @@
 | roofline_report | deliverable (g), from dry-run artifacts  |
 | overlap         | ZeRO-2 serialized-vs-pipelined step time |
 | faceoff         | optimizer family, equal wall-clock; bucketed-vs-per-leaf Muon dispatch |
+| guard_overhead  | in-graph non-finite guard cost (<= 3% envelope) |
 
-``overlap`` is opt-in here (``--only overlap``): run it directly
-(``python -m benchmarks.overlap``) to get the 4-device CPU mesh — via
-this driver jax is already initialized with however many devices exist.
+``overlap`` and ``guard_overhead`` are opt-in here (``--only ...``): run
+them directly (``python -m benchmarks.overlap``) to get the 4-device CPU
+mesh — via this driver jax is already initialized with however many
+devices exist.
 
 After the benches, every ``artifacts/bench/BENCH_*.json`` is aggregated
 into ``BENCH_summary.json`` (stable schema: artifact name -> headline
@@ -43,6 +45,7 @@ BENCHES = {
         [] if full else ["--steps", "120"]),
     "roofline_report": lambda full: roofline_report.main([]),
     "overlap": lambda full: _overlap(full),
+    "guard_overhead": lambda full: _guard_overhead(full),
     "faceoff": lambda full: faceoff.main(
         [] if full else ["--steps", "40", "--batch", "4", "--seq", "32",
                          "--iters", "3"]),
@@ -53,6 +56,11 @@ def _overlap(full: bool):
     from benchmarks import overlap
     return overlap.main([] if full else
                         ["--accum", "1", "4", "--iters", "2", "--batch", "16"])
+
+
+def _guard_overhead(full: bool):
+    from benchmarks import guard_overhead
+    return guard_overhead.main([] if full else ["--iters", "10"])
 
 
 # small identifying keys kept verbatim so summary rows map back to their
@@ -141,7 +149,8 @@ def main() -> None:
     if args.summarize:
         summarize()
         return
-    names = args.only or [n for n in BENCHES if n != "overlap"]
+    names = args.only or [n for n in BENCHES
+                          if n not in ("overlap", "guard_overhead")]
     failures = []
     for name in names:
         print(f"\n{'=' * 70}\n== benchmark: {name}\n{'=' * 70}", flush=True)

@@ -37,6 +37,7 @@ class Combo:
     engine: str            # "bucketed" | "single-pass"
     wire: str              # "fp32" | "int8-ef"
     accum: int = 1
+    guard: bool = False    # in-graph non-finite guard + bitwise step skip
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -58,7 +59,8 @@ class Combo:
 
     @property
     def id(self) -> str:
-        return f"{self.optimizer}/{self.engine}/{self.wire}/accum{self.accum}"
+        base = f"{self.optimizer}/{self.engine}/{self.wire}/accum{self.accum}"
+        return base + "/guard" if self.guard else base
 
 
 class BucketMeta:

@@ -53,6 +53,16 @@ def build_combos(optimizers: Optional[List[str]] = None,
     if not optimizers or "rmnp" in names:
         combos.append(Combo("rmnp", "single-pass", "fp32", 4))
         combos.append(Combo("rmnp", "single-pass", "int8-ef", 4))
+    # guarded lowerings: the non-finite guard's post-update selects must
+    # not cost the pipelined step its zero serialization edges, its
+    # donation aliasing or its memory profile — rmnp + normuon on both
+    # wires (the fault-injection proof matrix) plus the accum interaction
+    for n in ("rmnp", "normuon"):
+        if not optimizers or n in names:
+            combos += [Combo(n, "single-pass", w, 1, guard=True)
+                       for w in WIRES]
+    if not optimizers or "rmnp" in names:
+        combos.append(Combo("rmnp", "single-pass", "fp32", 4, guard=True))
     if engines:
         combos = [c for c in combos if c.engine in engines]
     if wires:
@@ -138,7 +148,8 @@ def lower_combo(combo: Combo, *, break_mode: Optional[str] = None) -> Artifacts:
     params, comp, batch = fx["params"], fx["comp"], fx["batch"]
     opt_state = jax.eval_shape(opt.init, params)
 
-    kwargs = dict(compress=combo.compress, accum=combo.accum)
+    kwargs = dict(compress=combo.compress, accum=combo.accum,
+                  guard=combo.guard)
     if combo.zero2:
         kwargs.update(zero2=True, opt_state=opt_state, overlap=True)
     base_step = make_dp_train_step(fx["cfg"], opt, fx["mesh"], **kwargs)

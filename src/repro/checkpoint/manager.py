@@ -24,6 +24,8 @@ import os
 import shutil
 import threading
 import time
+import warnings
+import zipfile
 from pathlib import Path
 from typing import Any, Optional, Tuple
 
@@ -103,20 +105,68 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def _committed_steps(self):
+        """Steps with a COMMITTED marker *and* a parseable manifest.  A
+        torn / unparseable manifest.json is treated exactly like a missing
+        commit marker (warn by name, skip the step) — the atomic-rename
+        commit makes it unlikely, but a disk-full truncation or an fsck
+        salvage can still produce one, and a restore that dies mid-ladder
+        on it would defeat the fallback this ordering exists for."""
         out = []
         for p in sorted(self.dir.glob("step_*")):
-            if (p / "COMMITTED").exists():
-                out.append(int(p.name.split("_")[1]))
+            if not (p / "COMMITTED").exists():
+                continue
+            try:
+                json.loads((p / "manifest.json").read_text())
+            except (OSError, ValueError) as e:
+                warnings.warn(
+                    f"checkpoint {p.name}: torn/unparseable manifest.json "
+                    f"({e}) — treating like a missing commit marker",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            out.append(int(p.name.split("_")[1]))
         return out
 
     def _prune(self):
         steps = self._committed_steps()
-        for s in steps[:-self.keep] if self.keep else []:
-            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        if not self.keep:
+            return
+        # the newest last-known-good step is never pruned: it is the rewind
+        # ladder's restore target, and three newer-but-poisoned checkpoints
+        # must not be able to push it out of the retention window
+        keepers = set(steps[-self.keep:]) | set(self.good_steps()[-1:])
+        for s in steps:
+            if s not in keepers:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     def latest_step(self) -> Optional[int]:
         steps = self._committed_steps()
         return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    # last-known-good: a committed checkpoint is *promoted* to "good" only
+    # after the launcher has watched a health window of anomaly-free steps
+    # go by (checkpoint/manager.py stores the marker; the promotion policy
+    # lives in launch/train.py).  The rewind ladder restores the newest
+    # good step, never merely the newest step — the newest step is usually
+    # the one written just before the anomaly surfaced.
+    def mark_good(self, step: int) -> None:
+        """Promote a committed step to last-known-good (idempotent)."""
+        with self._save_lock:
+            self._join()
+            d = self._step_dir(step)
+            if not (d / "COMMITTED").exists():
+                raise ValueError(
+                    f"cannot mark step {step} good: no committed checkpoint "
+                    f"at {d}")
+            (d / "GOOD").write_text("ok")
+
+    def good_steps(self):
+        return [s for s in self._committed_steps()
+                if (self._step_dir(s) / "GOOD").exists()]
+
+    def latest_good_step(self) -> Optional[int]:
+        good = self.good_steps()
+        return good[-1] if good else None
 
     def read_layout(self, step: int) -> Optional[dict]:
         """The state-layout manifest entry written at save time (mesh size,
@@ -179,8 +229,22 @@ class CheckpointManager:
                 int(manifest["data_step"]))
 
     def restore_latest(self, like: Any) -> Optional[Tuple[Any, int, int]]:
-        step = self.latest_step()
-        if step is None:
-            return None
-        state, data_step = self.restore(step, like)
-        return state, step, data_step
+        """Restore the newest committed step, falling back to the previous
+        committed step (with a named warning) when a checkpoint turns out
+        unreadable mid-restore — a torn npz or a manifest that goes bad
+        between listing and reading is a damaged artifact, not a caller
+        bug.  Genuine template mismatches (``_validate``'s ValueError)
+        still propagate: restoring older state into the wrong structure
+        would not fix those."""
+        for step in reversed(self._committed_steps()):
+            try:
+                state, data_step = self.restore(step, like)
+            except (OSError, json.JSONDecodeError,
+                    zipfile.BadZipFile) as e:
+                warnings.warn(
+                    f"checkpoint step_{step:09d} is unreadable ({e}) — "
+                    f"falling back to the previous committed step",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            return state, step, data_step
+        return None

@@ -46,9 +46,17 @@ class ClipStats(NamedTuple):
 
 
 def clip_by_global_norm(grads: PyTree, max_norm: float):
+    """Global-norm clip.  ``max_norm <= 0`` disables clipping: the grads
+    pass through *bitwise untouched* (no cast round-trip, no scale-by-1
+    multiply) while ``global_norm`` is still measured and ``clipped`` pins
+    to 0.0 — so metrics and the non-finite guard keep working with the
+    clip off and no special-cased step is needed."""
     sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
              for g in jax.tree_util.tree_leaves(grads))
     gnorm = jnp.sqrt(sq)
+    if max_norm <= 0:
+        return grads, ClipStats(global_norm=gnorm,
+                                clipped=jnp.zeros((), jnp.float32))
     scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
     clipped = jax.tree_util.tree_map(
         lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)

@@ -191,8 +191,24 @@ def fold_error_chunks(plan, chunk_means, state: CompressionState,
     return {k: chunk_means[k] + err[k] for k in chunk_means}
 
 
+def rollback_fold(ok, new_state: CompressionState,
+                  old_state: CompressionState) -> CompressionState:
+    """Undo the error-feedback fold of a rejected step.
+
+    The int8 schedule *consumes* the error accumulator before the wire
+    (:func:`fold_error_chunks` / stage (a)) and writes the fresh residual
+    after it — so by the time the non-finite guard has a verdict, the EF
+    state has already turned over.  Applying the step's params/momentum
+    rollback without also rolling the residual back would smuggle a
+    poisoned (or simply wrong-epoch) residual into the next step's fold.
+    ``jnp.where(ok, new, old)`` per leaf keeps the healthy path bitwise
+    (select of the new value) and the skip path bitwise pre-step."""
+    return CompressionState(error=jax.tree_util.tree_map(
+        lambda n, o: jnp.where(ok, n, o), new_state.error, old_state.error))
+
+
 def compressed_reduce_scatter_leaf(v_chunks: jax.Array, axis_name: str,
-                                   n_dev: int):
+                                   n_dev: int, wire_fault=None):
     """int8 error-feedback reduce-scatter of one chunked bucket operand.
 
     ``v_chunks``: ``(n_dev, chunk, d_in, d_out)`` fp32 — this rank's local
@@ -202,6 +218,12 @@ def compressed_reduce_scatter_leaf(v_chunks: jax.Array, axis_name: str,
     fp32 block scales, dequantize + fp32 local sum.  Stage (d) — the bf16
     all-gather and its rounding bias — disappears because the result *stays
     sharded*: rank ``r`` keeps its fp32 chunk sum.
+
+    ``wire_fault`` (fault-injection plumbing, ``repro.train.faults``) is an
+    optional ``(q, scale) -> (q, scale)`` hook applied to the *outgoing*
+    wire data — after the sender's residual is computed, so error feedback
+    stays honest and only the receivers see the corruption, exactly like a
+    real link fault.
 
     Returns ``(mean_shard fp32 (chunk, d_in, d_out), resid like v_chunks)``
     where ``resid`` is the rank-local quantization residual to scatter back
@@ -222,6 +244,8 @@ def compressed_reduce_scatter_leaf(v_chunks: jax.Array, axis_name: str,
     deq = jax.vmap(dequantize_blockwise)(q, scale)
     resid = (flat - deq)[:, :n].reshape(v_chunks.shape)
 
+    if wire_fault is not None:
+        q, scale = wire_fault(q, scale)
     q_recv = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
                                 tiled=False)
     s_recv = jax.lax.all_to_all(scale, axis_name, split_axis=0,

@@ -60,6 +60,121 @@ class StepTimeMonitor:
         return flagged
 
 
+class AnomalyMonitor:
+    """Numerical-anomaly escalation ladder (host side of the resilience
+    layer; the in-graph half is train/pipeline.py's non-finite guard).
+
+    Per step the launcher reports the loss plus the guard verdict and
+    :meth:`record` answers with a rung:
+
+    * ``"ok"``      — healthy; apply, maybe promote a pending checkpoint
+      to last-known-good.
+    * ``"skip"``    — the in-graph guard already masked the update (or the
+      loss itself came back non-finite); nothing to undo, keep going, but
+      burn one unit of the consecutive-skip budget.
+    * ``"rewind"``  — the budget is gone (a *persistent* fault skipping is
+      not clearing) or the loss spiked while staying finite (a fault the
+      guard cannot see — e.g. a bounded int8 payload bit-flip — that has
+      already poisoned the state, so skipping forward cannot help):
+      restore the last-known-good checkpoint, back the LR off, replay.
+    * ``"abort"``   — the rewind budget is gone too; fail loudly naming
+      the offending step and leaves (:meth:`post_mortem`) rather than
+      ship a silently-poisoned model.
+
+    Loss-spike detection mirrors :class:`StepTimeMonitor`: EWMA mean /
+    variance, a step flags when it exceeds ``abs_factor`` x mean or
+    ``spike_k`` sigmas (with the ``min_rel`` floor, upward only — a loss
+    *drop* is never an anomaly), after ``warmup_steps`` healthy samples.
+    Anomalous samples never enter the EWMA."""
+
+    def __init__(self, *, ema_alpha: float = 0.05, spike_k: float = 6.0,
+                 abs_factor: float = 3.0, min_rel: float = 1.5,
+                 warmup_steps: int = 8, skip_budget: int = 3,
+                 rewind_budget: int = 2, leaf_names=()):
+        self.alpha = ema_alpha
+        self.spike_k = spike_k
+        self.abs_factor = abs_factor
+        self.min_rel = min_rel
+        self.warmup = warmup_steps
+        self.skip_budget = skip_budget
+        self.rewind_budget = rewind_budget
+        self.leaf_names = list(leaf_names)
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+        self.consecutive_skips = 0
+        self.rewinds = 0
+        self.skips: List[dict] = []
+        self.spikes: List[dict] = []
+
+    def bad_leaves(self, flags) -> List[str]:
+        """Names of the flag units the guard reported non-finite (flag
+        falsy), by index into ``leaf_names`` (train/pipeline.py
+        ``guard_flag_names`` order)."""
+        if flags is None:
+            return []
+        out = []
+        for i, f in enumerate(flags):
+            if not bool(f):
+                out.append(self.leaf_names[i] if i < len(self.leaf_names)
+                           else f"flag_{i}")
+        return out
+
+    def record(self, step: int, loss: float, skipped: bool = False,
+               flags=None) -> str:
+        """Report step ``step``; returns the rung (see class docstring)."""
+        finite = loss == loss and abs(loss) != float("inf")
+        if skipped or not finite:
+            self.consecutive_skips += 1
+            self.skips.append({"step": step, "loss": loss,
+                               "leaves": self.bad_leaves(flags)})
+            if self.consecutive_skips > self.skip_budget:
+                return self._escalate()
+            return "skip"
+        self.consecutive_skips = 0
+        self.n += 1
+        if self.mean is None:
+            self.mean = loss
+            return "ok"
+        if self.n > self.warmup:
+            sigma = self.var ** 0.5
+            if (loss > self.mean * self.abs_factor
+                    or (sigma > 0 and loss > self.mean * self.min_rel
+                        and loss > self.mean + self.spike_k * sigma)):
+                self.spikes.append(
+                    {"step": step, "loss": loss, "mean": self.mean})
+                # a finite spike means the poison is already *in* the
+                # state — skipping forward can't undo an applied update,
+                # so a spike escalates straight to the rewind rung
+                return self._escalate()
+        d = loss - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return "ok"
+
+    def _escalate(self) -> str:
+        self.consecutive_skips = 0
+        self.rewinds += 1
+        return "abort" if self.rewinds > self.rewind_budget else "rewind"
+
+    def post_mortem(self) -> str:
+        """One line naming what went wrong and where — the abort message."""
+        parts = []
+        if self.skips:
+            last = self.skips[-1]
+            leaves = ", ".join(last["leaves"]) or "<none flagged>"
+            parts.append(f"last skipped step {last['step']} "
+                         f"(non-finite: {leaves}); "
+                         f"{len(self.skips)} skips total")
+        if self.spikes:
+            last = self.spikes[-1]
+            parts.append(f"last loss spike at step {last['step']} "
+                         f"({last['loss']:.4g} vs EWMA {last['mean']:.4g})")
+        parts.append(f"{self.rewinds} rewinds "
+                     f"(budget {self.rewind_budget})")
+        return "; ".join(parts)
+
+
 class HangGuard:
     """Wires the two detect rungs to the checkpoint rung of the ladder.
 

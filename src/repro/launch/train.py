@@ -33,6 +33,7 @@ from repro.distributed import elastic
 from repro.distributed.sharding import axis_rules
 from repro.launch.mesh import make_local_mesh
 from repro.models import init_params
+from repro.train import faults
 from repro.train.step import make_train_step
 
 
@@ -46,7 +47,12 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
           zero2: bool = False, compress: bool = True, accum: int = 1,
           overlap: Optional[bool] = None, log_file: str = "",
           stop_at: int = 0, kill_at: int = 0,
-          watchdog_deadline: float = 0.0, dump_params: str = ""):
+          watchdog_deadline: float = 0.0, dump_params: str = "",
+          clip_norm: float = 1.0, guard: bool = False,
+          inject_fault: str = "", anomaly_spike_k: float = 6.0,
+          anomaly_skip_budget: int = 3, anomaly_rewind_budget: int = 2,
+          anomaly_lr_backoff: float = 0.5, anomaly_health_window: int = 2,
+          anomaly_skip_batch: bool = False):
     """``stop_at`` simulates a crash: train to that step (schedules still
     span ``steps``) and exit WITHOUT the final checkpoint.  ``kill_at`` is
     harsher fault injection: SIGKILL the process mid-loop at that step —
@@ -79,18 +85,41 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
     ``overlap`` picks the bucket-pipelined ZeRO-2 schedule (independent
     per-bucket reduce-scatter/update chains, two-phase clip) over the
     serialized baseline — ``None`` (default) auto-resolves via
-    ``train.dp_step.resolve_overlap``."""
+    ``train.dp_step.resolve_overlap``.
+
+    **Numerical resilience.**  ``guard=True`` arms the in-graph non-finite
+    guard (a NaN/Inf step is masked bitwise, train/pipeline.py) plus the
+    host-side escalation ladder (``distributed/monitor.py
+    AnomalyMonitor``): more than ``anomaly_skip_budget`` consecutive
+    skipped steps, or a finite loss spike the guard cannot see, rewinds to
+    the last-known-good checkpoint with the learning rates backed off by
+    ``anomaly_lr_backoff`` and the data stream replayed deterministically
+    from the checkpointed position (``anomaly_skip_batch=True``
+    additionally drops the batches of skipped steps on replay); more than
+    ``anomaly_rewind_budget`` rewinds aborts loudly naming the offending
+    step and leaves.  A periodic checkpoint is *promoted* to
+    last-known-good only after ``anomaly_health_window`` further anomaly-
+    free steps (``CheckpointManager.mark_good``).  ``inject_fault``
+    (``kind:leaf:step[:microbatch]``, ``repro.train.faults``) injects a
+    NaN/Inf/wire-bit-flip fault for the resilience proofs; injected faults
+    are disarmed on rewind (transient-fault model — the abort rung covers
+    faults that keep firing).  ``clip_norm <= 0`` disables gradient
+    clipping (metrics keep reporting)."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
 
     mesh = make_local_mesh(data=len(jax.devices()))
     n_dev = mesh.shape["data"]
+    fault_spec = faults.parse_fault(inject_fault) if inject_fault else None
+    if fault_spec is not None:
+        print(f"[train] fault injection armed: {fault_spec.describe()}",
+              flush=True)
 
-    def build_opt(shard_size: int):
+    def build_opt(shard_size: int, lr_scale: float = 1.0):
         return make_optimizer(optimizer, dict(
-            lr_matrix=cosine_with_warmup(lr_matrix, steps),
-            lr_adamw=cosine_with_warmup(lr_adamw, steps),
+            lr_matrix=cosine_with_warmup(lr_matrix * lr_scale, steps),
+            lr_adamw=cosine_with_warmup(lr_adamw * lr_scale, steps),
             matrix_embed=matrix_embed,
             use_kernel=use_kernel,
             fused=fused,
@@ -110,16 +139,28 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
                                   compress=compress and zero2,
                                   opt_state=opt_state)
 
+    def build_step(opt_, fault):
+        """The jitted step for this opt / fault arming (rebuilt on rewind:
+        LR backoff changes the schedules, and the injected fault is
+        disarmed)."""
+        if zero2:
+            from repro.train.dp_step import make_dp_train_step
+            fn = make_dp_train_step(
+                cfg, opt_, mesh, shard_state=True, zero2=True,
+                compress=compress, accum=accum, overlap=overlap,
+                opt_state=opt_state, clip_norm=clip_norm, guard=guard,
+                fault=fault, remat="none" if reduced else "full")
+        else:
+            fn = make_train_step(cfg, opt_, num_microbatches=accum,
+                                 clip_norm=clip_norm, guard=guard,
+                                 fault=fault,
+                                 remat="none" if reduced else "full")
+        return jax.jit(fn, donate_argnums=(0, 1))
+
     if zero2:
-        from repro.train.dp_step import init_dp_state, make_dp_train_step
-        step_fn = make_dp_train_step(
-            cfg, opt, mesh, shard_state=True, zero2=True, compress=compress,
-            accum=accum, overlap=overlap, opt_state=opt_state,
-            remat="none" if reduced else "full")
+        from repro.train.dp_step import init_dp_state
         comp_state = init_dp_state(params)
     else:
-        step_fn = make_train_step(cfg, opt, num_microbatches=accum,
-                                  remat="none" if reduced else "full")
         comp_state = None
 
     if log_every and (fused or fused_apply or zero2 or use_kernel):
@@ -159,9 +200,9 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
             print(f"[train] resumed from step {start_step}")
 
     stream = make_stream(cfg, seq, batch, seed=seed, start_step=data_step)
-    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    jit_step = build_step(opt, fault_spec)
 
-    guard, snapshot = None, {}
+    hang_guard, snapshot = None, {}
     if watchdog_deadline:
         from repro.distributed.monitor import HangGuard
 
@@ -173,17 +214,48 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
             mgr.save(snapshot["step"], snapshot["state"],
                      data_step=snapshot["data_step"], block=True,
                      layout=layout)
-        guard = HangGuard(watchdog_deadline, emergency_save)
+        hang_guard = HangGuard(watchdog_deadline, emergency_save)
+
+    monitor = None
+    if guard:
+        from repro.distributed.monitor import AnomalyMonitor
+        from repro.train import pipeline
+        leaf_names = (pipeline.guard_flag_names(opt.bucket_plan(params),
+                                                params, n_dev)
+                      if zero2 else [p for p, _ in tree_paths(params)])
+        monitor = AnomalyMonitor(spike_k=anomaly_spike_k,
+                                 skip_budget=anomaly_skip_budget,
+                                 rewind_budget=anomaly_rewind_budget,
+                                 leaf_names=leaf_names)
+    # abstract template for rewind restores: by rewind time the live
+    # arrays have been donated away, so restore validates against shapes
+    state_template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        (params, opt_state, comp_state) if zero2 else (params, opt_state))
+    lr_scale = 1.0
+    pending_good: list = []    # (ckpt_step) awaiting the health window
+    bad_data_steps: set = set()  # data positions of skipped steps (replay)
+    # the live state's shardings, captured after the first executed step: a
+    # rewind restore yields host arrays; device_put onto the captured
+    # shardings re-enters the live loop's executable instead of tracing a
+    # fresh uncommitted-input variant
+    state_shardings = None
 
     history = []
     t0 = time.time()
     end_step = min(steps, stop_at) if stop_at else steps
     with mesh, axis_rules(mesh):
-        for step in range(start_step, end_step):
+        step = start_step
+        while step < end_step:
+            if anomaly_skip_batch and stream.step in bad_data_steps:
+                bad_data_steps.discard(stream.step)
+                next(stream)  # drop the offending batch on replay
+                print(f"[train] replay: dropped the batch of skipped "
+                      f"data step {stream.step - 1}", flush=True)
             np_batch = next(stream)
             jbatch = {k: jnp.asarray(v) for k, v in np_batch.items()}
-            if guard is not None:
-                guard.arm()
+            if hang_guard is not None:
+                hang_guard.arm()
                 t_step = time.time()
             if zero2:
                 params, opt_state, comp_state, metrics = jit_step(
@@ -191,7 +263,12 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
             else:
                 params, opt_state, metrics = jit_step(
                     params, opt_state, jbatch, jnp.int32(step))
-            if guard is not None:
+            if state_shardings is None:
+                state_shardings = jax.tree_util.tree_map(
+                    lambda x: x.sharding,
+                    (params, opt_state, comp_state) if zero2
+                    else (params, opt_state))
+            if hang_guard is not None:
                 # host snapshot BEFORE recording: the emergency save must
                 # never read live device buffers — the next step donates
                 # them, and a hung step already owns its donated inputs
@@ -201,7 +278,75 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
                         np.asarray,
                         (params, opt_state, comp_state) if zero2
                         else (params, opt_state)))
-                guard.record(step, time.time() - t_step)
+                hang_guard.record(step, time.time() - t_step)
+            if monitor is not None:
+                gflags = np.asarray(metrics.pop("guard_flags"))
+                was_skipped = bool(float(metrics.pop("skipped")))
+                action = monitor.record(step, float(metrics["loss"]),
+                                        skipped=was_skipped, flags=gflags)
+                if action != "ok":
+                    pending_good.clear()  # anomaly: nothing in flight
+                    #   gets promoted to last-known-good
+                if action == "skip":
+                    leaves = ", ".join(monitor.bad_leaves(gflags)) or \
+                        "<loss non-finite>"
+                    bad_data_steps.add(stream.step - 1)
+                    print(f"[train] guard: step {step} SKIPPED bitwise "
+                          f"(non-finite: {leaves}; "
+                          f"{monitor.consecutive_skips}/"
+                          f"{anomaly_skip_budget} consecutive)", flush=True)
+                elif action == "rewind":
+                    lr_scale *= anomaly_lr_backoff
+                    opt = build_opt(n_dev if zero2 else 1, lr_scale)
+                    good = (mgr.latest_good_step()
+                            if mgr is not None else None)
+                    if good is not None:
+                        mgr.wait()
+                        state, data_step = mgr.restore(good, state_template)
+                        if state_shardings is not None:
+                            state = jax.device_put(state, state_shardings)
+                        if zero2:
+                            params, opt_state, comp_state = state
+                            if compress:
+                                # the int8 error-feedback residual is
+                                # per-device state under a replicated
+                                # annotation; a host checkpoint holds only
+                                # rank 0's copy, so the replayed tail is
+                                # ~1e-5-close, not bitwise (fp32 wire IS
+                                # bitwise — no residual to lose)
+                                print("[train] rewind: int8 EF residual "
+                                      "restored from rank 0's copy; replay "
+                                      "is approximate on this wire",
+                                      flush=True)
+                        else:
+                            params, opt_state = state
+                        rewind_to = good
+                    else:
+                        # no good checkpoint yet: restart from init
+                        params = init_params(cfg, jax.random.PRNGKey(seed))
+                        opt_state = opt.init(params)
+                        if zero2:
+                            from repro.train.dp_step import init_dp_state
+                            comp_state = init_dp_state(params)
+                        rewind_to, data_step = 0, 0
+                    if fault_spec is not None:
+                        print("[train] rewind: disarming the injected "
+                              "fault (transient-fault model)", flush=True)
+                        fault_spec = None
+                    jit_step = build_step(opt, fault_spec)
+                    stream = make_stream(cfg, seq, batch, seed=seed,
+                                         start_step=data_step)
+                    print(f"[train] anomaly ladder: rewind #"
+                          f"{monitor.rewinds} to step {rewind_to} "
+                          f"(lr x{lr_scale:g}, data step {data_step}; "
+                          f"{monitor.post_mortem()})", flush=True)
+                    step = rewind_to
+                    continue
+                elif action == "abort":
+                    raise RuntimeError(
+                        f"[train] numerical-anomaly escalation ladder "
+                        f"exhausted at step {step}: "
+                        f"{monitor.post_mortem()}")
             if log_every and (step % log_every == 0 or step == steps - 1):
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = step
@@ -222,12 +367,25 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
                          else (params, opt_state))
                 mgr.save(step + 1, state, data_step=stream.step,
                          layout=layout)
+                if monitor is not None:
+                    pending_good.append(step + 1)
+            if monitor is not None and pending_good:
+                # promote checkpoints that survived the health window of
+                # anomaly-free steps to last-known-good
+                ripe = [s for s in pending_good
+                        if step + 1 - s >= anomaly_health_window]
+                for s in ripe:
+                    mgr.mark_good(s)
+                    pending_good.remove(s)
+                    print(f"[train] checkpoint step {s} promoted to "
+                          f"last-known-good", flush=True)
             if kill_at and step + 1 == kill_at:
                 print(f"[train] fault injection: SIGKILL at step {step + 1}",
                       flush=True)
                 os.kill(os.getpid(), signal.SIGKILL)
-    if guard is not None:
-        guard.stop()
+            step += 1
+    if hang_guard is not None:
+        hang_guard.stop()
     if mgr is not None and end_step == steps:
         state = ((params, opt_state, comp_state) if zero2
                  else (params, opt_state))
@@ -325,6 +483,40 @@ def main():
                          "cross-run comparison by the fault-injection "
                          "harnesses")
     ap.add_argument("--log-file", default="")
+    ap.add_argument("--clip-norm", type=float, default=1.0,
+                    help="global gradient-norm clip; <= 0 disables clipping "
+                         "while grad_norm/clip_rate metrics keep reporting")
+    ap.add_argument("--guard", action="store_true",
+                    help="numerical resilience: in-graph non-finite guard "
+                         "(a NaN/Inf step is skipped with every buffer "
+                         "bitwise-unchanged) + the host-side anomaly "
+                         "escalation ladder (skip -> rewind to "
+                         "last-known-good with LR backoff and deterministic "
+                         "batch replay -> loud abort)")
+    ap.add_argument("--inject-fault", default="",
+                    help="inject a numerical fault (resilience proofs): "
+                         "kind:leaf:step[:microbatch] — kind is nan|inf|"
+                         "bitflip, leaf a gradient-leaf path ('*' = first) "
+                         "or a bucket key for bitflip, a trailing '+' on "
+                         "step makes it sticky (every step >= k); e.g. "
+                         "nan:*:6+ or bitflip:8x16:4")
+    ap.add_argument("--anomaly-spike-k", type=float, default=6.0,
+                    help="loss-spike z-score threshold of the anomaly "
+                         "ladder (EWMA sigmas)")
+    ap.add_argument("--anomaly-skip-budget", type=int, default=3,
+                    help="consecutive guard-skipped steps tolerated before "
+                         "escalating to a rewind")
+    ap.add_argument("--anomaly-rewind-budget", type=int, default=2,
+                    help="rewinds tolerated before aborting loudly")
+    ap.add_argument("--anomaly-lr-backoff", type=float, default=0.5,
+                    help="multiply both learning rates by this on every "
+                         "rewind (1.0 = replay at full LR)")
+    ap.add_argument("--anomaly-health-window", type=int, default=2,
+                    help="anomaly-free steps a periodic checkpoint must "
+                         "survive before promotion to last-known-good")
+    ap.add_argument("--anomaly-skip-batch", action="store_true",
+                    help="on rewind replay, drop the batches that fed "
+                         "guard-skipped steps (suspected data poisoning)")
     args = ap.parse_args()
     engine = args.engine
     if args.fused or args.fused_apply:
@@ -353,7 +545,14 @@ def main():
           accum=args.accum, overlap=overlap,
           log_file=args.log_file, stop_at=args.stop_at,
           kill_at=args.kill_at, watchdog_deadline=args.watchdog_deadline,
-          dump_params=args.dump_params)
+          dump_params=args.dump_params, clip_norm=args.clip_norm,
+          guard=args.guard, inject_fault=args.inject_fault,
+          anomaly_spike_k=args.anomaly_spike_k,
+          anomaly_skip_budget=args.anomaly_skip_budget,
+          anomaly_rewind_budget=args.anomaly_rewind_budget,
+          anomaly_lr_backoff=args.anomaly_lr_backoff,
+          anomaly_health_window=args.anomaly_health_window,
+          anomaly_skip_batch=args.anomaly_skip_batch)
 
 
 if __name__ == "__main__":

@@ -64,10 +64,10 @@ from repro.core import apply_updates, clip_by_global_norm
 from repro.core.types import Optimizer, PyTree
 from repro.distributed.compression import (
     CompressionState, compressed_mean, compressed_reduce_scatter_leaf,
-    exact_mean, exact_reduce_scatter, init_compression_state,
+    exact_mean, exact_reduce_scatter, init_compression_state, rollback_fold,
 )
 from repro.distributed.sharding import bucket_specs
-from repro.train import pipeline
+from repro.train import faults, pipeline
 
 
 def resolve_overlap(overlap: Optional[bool], *, accum: int,
@@ -87,7 +87,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                        compress: bool = True, remat: str = "none",
                        shard_state: bool = False, zero2: bool = False,
                        accum: int = 1, overlap: Optional[bool] = None,
-                       opt_state: PyTree = None):
+                       opt_state: PyTree = None, guard: bool = False,
+                       fault=None):
     """(params, opt_state, comp_state, batch, step) -> (params, opt_state,
     comp_state, metrics).  Batch is sharded along ``axis_name``; params
     replicated; optimizer state replicated (default) or ZeRO-sharded along
@@ -101,7 +102,16 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
     local batch into that many microbatches (scan accumulation);
     ``overlap`` picks the bucket-pipelined ZeRO-2 schedule over the
     serialized baseline (no effect off the ZeRO-2 path) — None (default)
-    auto-resolves via :func:`resolve_overlap`."""
+    auto-resolves via :func:`resolve_overlap`.
+
+    ``clip_norm <= 0`` disables clipping while ``grad_norm``/``clip_rate``
+    metrics keep reporting (``clip_rate`` pinned to 0).  ``guard=True``
+    adds the in-graph non-finite guard (train/pipeline.py): a step whose
+    gradient carries a NaN/Inf anywhere is skipped with params, optimizer
+    state and the int8 error-feedback residual left bitwise-unchanged, and
+    the metrics grow ``skipped`` (0/1) and per-leaf ``guard_flags``.
+    ``fault`` (a ``repro.train.faults.FaultSpec``) injects a fault for the
+    resilience proofs."""
     n_dev = mesh.shape[axis_name]
     overlap = resolve_overlap(overlap, accum=accum, compress=compress)
     if zero2:
@@ -143,10 +153,11 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
     if zero2 and overlap:
         local_step = pipeline.make_pipelined_zero2_step(
             cfg, opt, axis_name=axis_name, n_dev=n_dev, clip_norm=clip_norm,
-            compress=compress, remat=remat, accum=accum)
+            compress=compress, remat=remat, accum=accum, guard=guard,
+            fault=fault)
         return _wrap(local_step, mesh, axis_name, state_spec)
 
-    def zero2_reduce(grads, comp_state):
+    def zero2_reduce(grads, comp_state, step):
         """Serialized baseline: chunked reduce-scatter of every bucket's
         mean gradient (full mean bucket never materializes), then everything
         else as the usual per-leaf mean.  Returns (g_shards, rest-mean
@@ -168,7 +179,9 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
             resid = {}
             for b in plan.buckets:
                 g_shards[b.key], resid[b.key] = compressed_reduce_scatter_leaf(
-                    chunks[b.key], axis_name, n_dev)
+                    chunks[b.key], axis_name, n_dev,
+                    wire_fault=faults.wire_fault_for(fault, b.key, step,
+                                                     axis_name))
             grads, comp_state = compressed_mean(
                 grads, comp_state, axis_name, n_dev, skip=skip)
             comp_state = CompressionState(
@@ -183,11 +196,14 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
         return g_shards, grads, comp_state, plan
 
     def local_step(params, opt_state, comp_state, batch, step):
+        prev = (params, opt_state, comp_state)
         grads, metrics = pipeline.microbatch_grads(cfg, params, batch, accum,
-                                                   remat)
+                                                   remat, fault=fault,
+                                                   step=step)
+        ginfo = None
         if zero2:
             g_shards, grads, comp_state, plan = zero2_reduce(grads,
-                                                             comp_state)
+                                                             comp_state, step)
             metrics = jax.tree_util.tree_map(
                 lambda m: jax.lax.pmean(m, axis_name), metrics)
             # same two-phase norm as the pipelined path (per-leaf partials,
@@ -195,7 +211,7 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
             # matrix leaves never enter sq_rest and rest leaves are cast to
             # fp32 exactly once), but the scale is applied the serialized
             # way: pre-scaled shard buffers between collectives and updates
-            scale, rest32, clip_stats = pipeline.two_phase_clip(
+            scale, rest32, clip_stats, ginfo = pipeline.two_phase_clip(
                 plan, g_shards, grads, clip_norm, axis_name, n_dev)
             g_shards = {k: s * scale for k, s in g_shards.items()}
             grads = pipeline.scale_rest(grads, rest32, scale)
@@ -209,6 +225,11 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                 grads = exact_mean(grads, axis_name)
             metrics = jax.tree_util.tree_map(
                 lambda m: jax.lax.pmean(m, axis_name), metrics)
+            if guard:
+                # flags off the post-reduce mean grads — same coverage as
+                # the two-phase scheme (wire faults included), and the
+                # per-leaf partials CSE with clip_by_global_norm's
+                ginfo = pipeline.finite_guard(grads)
             grads, clip_stats = clip_by_global_norm(grads, clip_norm)
             if opt.update_apply is not None:
                 params, opt_state = opt.update_apply(grads, opt_state, params,
@@ -218,6 +239,13 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
                 params = apply_updates(params, updates)
         metrics = dict(metrics, grad_norm=clip_stats.global_norm,
                        clip_rate=clip_stats.clipped)
+        if guard:
+            params = pipeline.mask_updates(ginfo.ok, params, prev[0])
+            opt_state = pipeline.mask_updates(ginfo.ok, opt_state, prev[1])
+            if compress:
+                comp_state = rollback_fold(ginfo.ok, comp_state, prev[2])
+            metrics["skipped"] = (~ginfo.ok).astype(jnp.float32)
+            metrics["guard_flags"] = ginfo.flags.astype(jnp.float32)
         return params, opt_state, comp_state, metrics
 
     return _wrap(local_step, mesh, axis_name, state_spec)

@@ -33,8 +33,23 @@ collective data-depends on another bucket's update output, and the
 traced-buffer count (``kernels/ops.py count_buffer_eqns``) stays at zero
 full-bucket fp32 gradient intermediates with ``accum > 1``
 (tests/_zero_shard_worker.py).
+
+The two-phase clip also carries the **in-graph non-finite guard**: the
+per-leaf partial sums of squares it already psums are exactly the
+reduction a finite-ness check needs (any NaN/Inf anywhere in a leaf makes
+that leaf's sum non-finite), so :class:`GuardInfo` costs one ``isfinite``
+over scalars that already exist — no extra collective, no extra pass over
+the gradients.  ``guard=True`` on the step then masks the *entire* update
+with ``jnp.where(ok, new, old)`` (:func:`mask_updates`): params, momentum,
+slot stripes and the folded int8 error-feedback residual
+(``compression.rollback_fold``) are bitwise-unchanged on a bad step, and
+bitwise the unguarded step on a healthy one.  The selects sit strictly
+*after* every collective and update, so the pipelined schedule keeps its
+zero serialization edges (analysis/overlap verifies the guarded combos).
 """
 from __future__ import annotations
+
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,9 +60,10 @@ from repro.core.mixed import ClipStats
 from repro.core.types import Optimizer, PyTree, map_with_path, path_str, tree_paths
 from repro.distributed.compression import (
     CompressionState, compressed_mean, compressed_reduce_scatter_leaf,
-    exact_mean, exact_reduce_scatter, fold_error_chunks,
+    exact_mean, exact_reduce_scatter, fold_error_chunks, rollback_fold,
 )
 from repro.models.model import loss_fn
+from repro.train import faults as faults_mod
 
 # above this axis size, two_phase_clip drops from per-leaf to per-bucket
 # partials: the per-leaf scheme traces one lax.switch branch per rank (exact
@@ -77,7 +93,8 @@ def _grads_of(cfg: ModelConfig, params, batch, remat: str):
 
 
 def microbatch_grads_chunked(cfg: ModelConfig, plan, params, batch,
-                             accum: int, n_chunks: int, remat: str = "none"):
+                             accum: int, n_chunks: int, remat: str = "none",
+                             fault=None, step=None):
     """Backward pass with the matrix gradients accumulated in the chunked
     per-destination-rank ZeRO-2 layout.
 
@@ -98,19 +115,27 @@ def microbatch_grads_chunked(cfg: ModelConfig, plan, params, batch,
 
     ``accum == 1`` skips the scan entirely and is bitwise the un-accumulated
     step.
+
+    ``fault`` (:class:`repro.train.faults.FaultSpec`, needs ``step``)
+    poisons the backward output at the chosen step/microbatch — upstream of
+    chunking, the wire and the clip.  ``fault=None`` leaves the trace
+    byte-identical to before the injector existed (no scanned index).
     """
     mat = plan.paths
     if accum == 1:
         grads, metrics = _grads_of(cfg, params, batch, remat)
+        grads = faults_mod.apply_grad_fault(fault, grads, step, 0)
         chunks = bucketing.gather_chunks(plan, grads, n_chunks,
                                          dtype=jnp.float32)
         return chunks, grads, metrics
 
     split = split_microbatches(batch, accum)
 
-    def mb(carry, mb_batch):
+    def mb(carry, xs):
+        mb_batch, mb_idx = xs if fault is not None else (xs, 0)
         chunk_acc, rest_acc = carry
         grads, metrics = _grads_of(cfg, params, mb_batch, remat)
+        grads = faults_mod.apply_grad_fault(fault, grads, step, mb_idx)
         chunk_acc = bucketing.accumulate_chunks(plan, grads, chunk_acc,
                                                 n_chunks)
         rest_acc = jax.tree_util.tree_map_with_path(
@@ -122,7 +147,8 @@ def microbatch_grads_chunked(cfg: ModelConfig, plan, params, batch,
     rest0 = map_with_path(
         lambda path, p: jnp.zeros((1,) * p.ndim if path in mat else p.shape,
                                   jnp.float32), params)
-    (chunk_sum, rest_sum), ms = jax.lax.scan(mb, (chunk0, rest0), split)
+    xs = (split, jnp.arange(accum)) if fault is not None else split
+    (chunk_sum, rest_sum), ms = jax.lax.scan(mb, (chunk0, rest0), xs)
     chunk_means = {k: v / accum for k, v in chunk_sum.items()}
     rest_grads = map_with_path(
         lambda path, g: g if path in mat else g / accum, rest_sum)
@@ -131,23 +157,28 @@ def microbatch_grads_chunked(cfg: ModelConfig, plan, params, batch,
 
 
 def microbatch_grads(cfg: ModelConfig, params, batch, accum: int,
-                     remat: str = "none"):
+                     remat: str = "none", fault=None, step=None):
     """Per-leaf microbatch accumulation (the serialized baseline): fp32
     accumulators shaped like ``params``, mean over ``accum`` microbatches.
-    ``accum == 1`` skips the scan and returns the raw backward leaves."""
+    ``accum == 1`` skips the scan and returns the raw backward leaves.
+    ``fault`` injects as in :func:`microbatch_grads_chunked`."""
     if accum == 1:
-        return _grads_of(cfg, params, batch, remat)
+        grads, metrics = _grads_of(cfg, params, batch, remat)
+        return faults_mod.apply_grad_fault(fault, grads, step, 0), metrics
     split = split_microbatches(batch, accum)
 
-    def mb(acc, mb_batch):
+    def mb(acc, xs):
+        mb_batch, mb_idx = xs if fault is not None else (xs, 0)
         grads, metrics = _grads_of(cfg, params, mb_batch, remat)
+        grads = faults_mod.apply_grad_fault(fault, grads, step, mb_idx)
         acc = jax.tree_util.tree_map(
             lambda a, g: a + g.astype(jnp.float32), acc, grads)
         return acc, metrics
 
     zero = jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    gsum, ms = jax.lax.scan(mb, zero, split)
+    xs = (split, jnp.arange(accum)) if fault is not None else split
+    gsum, ms = jax.lax.scan(mb, zero, xs)
     grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
     metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m, axis=0), ms)
     return grads, metrics
@@ -194,6 +225,52 @@ def _matrix_leaf_sq(plan, g_shards, axis_name: str, n_dev: int):
     return {path: stacked[i] for i, path in enumerate(order)}
 
 
+class GuardInfo(NamedTuple):
+    """Per-step finite-ness verdict, read off the clip partials for free.
+
+    ``flags[i]`` is True when flag unit ``i``'s sum of squares is finite
+    (units and order: :func:`guard_flag_names` — per gradient leaf on the
+    exact per-leaf clip scheme, per bucket + rest leaf beyond
+    ``_EXACT_CLIP_MAX_RANKS`` ranks).  ``ok`` folds every flag AND the
+    global norm itself (a finite-per-leaf sum can still overflow when
+    accumulated), so ``ok=False`` <=> the update must not be applied."""
+    ok: jax.Array     # () bool
+    flags: jax.Array  # (n_flags,) bool
+
+
+def guard_flag_names(plan, tree, n_dev: int):
+    """Static names for ``GuardInfo.flags``, index-aligned: gradient-leaf
+    paths in tree-flatten order up to ``_EXACT_CLIP_MAX_RANKS`` ranks,
+    else ``bucket:<key>`` per bucket followed by the rest-leaf paths."""
+    if n_dev <= _EXACT_CLIP_MAX_RANKS:
+        return [path for path, _ in tree_paths(tree)]
+    mat = plan.paths
+    return ([f"bucket:{b.key}" for b in plan.buckets]
+            + [p for p, _ in tree_paths(tree) if p not in mat])
+
+
+def finite_guard(grads) -> GuardInfo:
+    """Per-leaf finite flags for the replicated (non-two-phase) paths: one
+    sum of squares per leaf — the same per-leaf partials
+    ``clip_by_global_norm`` computes, so XLA CSEs the extra traversal away
+    and the guard costs one ``isfinite`` over scalars."""
+    sqs = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+           for g in jax.tree_util.tree_leaves(grads)]
+    flags = (jnp.isfinite(jnp.stack(sqs)) if sqs
+             else jnp.ones((0,), jnp.bool_))
+    return GuardInfo(ok=jnp.all(flags), flags=flags)
+
+
+def mask_updates(ok, new, old):
+    """Bitwise step skip: ``jnp.where(ok, new, old)`` on every leaf.
+    Select is an elementwise pick — ``ok=True`` yields bitwise ``new``
+    (a guarded healthy step is indistinguishable from an unguarded one),
+    ``ok=False`` bitwise ``old`` (a skipped step leaves every buffer
+    exactly as it was).  Applied strictly after the update, so no
+    collective depends on the verdict."""
+    return jax.tree_util.tree_map(lambda n, o: jnp.where(ok, n, o), new, old)
+
+
 def two_phase_clip(plan, g_shards, grads, clip_norm: float, axis_name: str,
                    n_dev: int):
     """Two-phase global-norm clip over the ZeRO-2 sharded matrix partition
@@ -212,8 +289,19 @@ def two_phase_clip(plan, g_shards, grads, clip_norm: float, axis_name: str,
     so no scaled-shard buffers sit between the collectives and the updates
     — the only cross-bucket dependence is this one scalar.
 
-    Returns ``(scale, rest32, stats)`` where ``rest32`` maps rest-leaf path
-    -> the once-cast fp32 leaf (matrix paths absent)."""
+    ``clip_norm <= 0`` disables clipping: ``scale`` is pinned to exactly
+    1.0 (folding it is bitwise identity) and ``clipped`` to 0.0, while
+    ``global_norm`` is still measured — metrics and the guard keep working
+    with the clip off.
+
+    The per-unit partials double as the non-finite guard: ``guard.flags``
+    is ``isfinite`` over the already-psum'd scalars (order:
+    :func:`guard_flag_names`), one OR-reduction riding the psum we already
+    pay.
+
+    Returns ``(scale, rest32, stats, guard)`` where ``rest32`` maps
+    rest-leaf path -> the once-cast fp32 leaf (matrix paths absent) and
+    ``guard`` is the :class:`GuardInfo`."""
     mat = plan.paths
     rest32 = {path: g.astype(jnp.float32)
               for path, g in tree_paths(grads) if path not in mat}
@@ -221,18 +309,34 @@ def two_phase_clip(plan, g_shards, grads, clip_norm: float, axis_name: str,
         leaf_sq = _matrix_leaf_sq(plan, g_shards, axis_name, n_dev)
         # exact replicated accumulation order: one scalar per leaf, summed
         # in tree-flatten order, starting from int 0 like clip_by_global_norm
-        sq = sum(leaf_sq[path] if path in mat else
-                 jnp.sum(jnp.square(rest32[path]))
-                 for path, _ in tree_paths(grads))
+        sqs = [leaf_sq[path] if path in mat else
+               jnp.sum(jnp.square(rest32[path]))
+               for path, _ in tree_paths(grads)]
+        sq = sum(sqs)
+        flags = (jnp.isfinite(jnp.stack(sqs)) if sqs
+                 else jnp.ones((0,), jnp.bool_))
     else:
-        sq_mat = sum(jnp.sum(jnp.square(s)) for s in g_shards.values())
-        sq_mat = jax.lax.psum(sq_mat, axis_name)
-        sq = sum(jnp.sum(jnp.square(g)) for g in rest32.values()) + sq_mat
+        # per-bucket partials, still one psum (a stacked vector instead of
+        # a scalar) so the guard keeps bucket granularity at pod scale
+        sq_mat = (jax.lax.psum(jnp.stack(
+            [jnp.sum(jnp.square(g_shards[b.key])) for b in plan.buckets]),
+            axis_name) if plan.buckets else jnp.zeros((0,), jnp.float32))
+        rest_sqs = [jnp.sum(jnp.square(g)) for g in rest32.values()]
+        sq = sum(rest_sqs) + jnp.sum(sq_mat)
+        flags = jnp.isfinite(
+            jnp.concatenate([sq_mat] + ([jnp.stack(rest_sqs)]
+                                        if rest_sqs else [])))
     gnorm = jnp.sqrt(sq)
-    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
-    stats = ClipStats(global_norm=gnorm,
-                      clipped=(gnorm > clip_norm).astype(jnp.float32))
-    return scale, rest32, stats
+    if clip_norm > 0:
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+        clipped = (gnorm > clip_norm).astype(jnp.float32)
+    else:
+        scale = jnp.ones((), jnp.float32)
+        clipped = jnp.zeros((), jnp.float32)
+    stats = ClipStats(global_norm=gnorm, clipped=clipped)
+    guard = GuardInfo(ok=jnp.logical_and(jnp.all(flags), jnp.isfinite(gnorm)),
+                      flags=flags)
+    return scale, rest32, stats, guard
 
 
 def scale_rest(grads, rest32, scale):
@@ -245,18 +349,29 @@ def scale_rest(grads, rest32, scale):
 
 def make_pipelined_zero2_step(cfg: ModelConfig, opt: Optimizer, *,
                               axis_name: str, n_dev: int, clip_norm: float,
-                              compress: bool, remat: str, accum: int):
+                              compress: bool, remat: str, accum: int,
+                              guard: bool = False,
+                              fault: Optional["faults_mod.FaultSpec"] = None):
     """The bucket-pipelined ZeRO-2 local step (call inside ``shard_map``
     over ``axis_name``): microbatch-accumulated chunked backward, one
     independent reduce-scatter -> clip-partial -> update chain per bucket,
     two-phase clip, updates entered through ``update_apply_sharded`` with
-    the clip scale folded per bucket."""
+    the clip scale folded per bucket.
+
+    ``guard=True`` masks the whole update (params, optimizer state, and on
+    the int8 wire the folded error-feedback residual) with the
+    :func:`two_phase_clip` finite verdict — a non-finite step leaves every
+    buffer bitwise-unchanged and reports ``skipped=1`` plus the per-leaf
+    ``guard_flags``.  ``fault`` injects a :mod:`repro.train.faults` fault
+    into the backward output or the int8 wire (test/proof plumbing)."""
 
     def local_step(params, opt_state, comp_state, batch, step):
         plan = opt.bucket_plan(params)
         mat = plan.paths
+        prev = (params, opt_state, comp_state)
         chunk_means, rest, metrics = microbatch_grads_chunked(
-            cfg, plan, params, batch, accum, n_dev, remat)
+            cfg, plan, params, batch, accum, n_dev, remat,
+            fault=fault, step=step)
 
         # per-bucket reduce chains: each bucket's collective depends only on
         # its own accumulated chunks (+ the shared error state), never on
@@ -269,7 +384,9 @@ def make_pipelined_zero2_step(cfg: ModelConfig, opt: Optimizer, *,
             resid = {}
             for b in plan.buckets:
                 g_shards[b.key], resid[b.key] = compressed_reduce_scatter_leaf(
-                    v_chunks[b.key], axis_name, n_dev)
+                    v_chunks[b.key], axis_name, n_dev,
+                    wire_fault=faults_mod.wire_fault_for(
+                        fault, b.key, step, axis_name))
             rest, comp_state = compressed_mean(
                 rest, comp_state, axis_name, n_dev, skip=skip)
             comp_state = CompressionState(
@@ -282,13 +399,23 @@ def make_pipelined_zero2_step(cfg: ModelConfig, opt: Optimizer, *,
         metrics = jax.tree_util.tree_map(
             lambda m: jax.lax.pmean(m, axis_name), metrics)
 
-        scale, rest32, clip_stats = two_phase_clip(
+        scale, rest32, clip_stats, ginfo = two_phase_clip(
             plan, g_shards, rest, clip_norm, axis_name, n_dev)
         rest = scale_rest(rest, rest32, scale)
         params, opt_state = opt.update_apply_sharded(
             g_shards, rest, opt_state, params, step, clip_scale=scale)
         metrics = dict(metrics, grad_norm=clip_stats.global_norm,
                        clip_rate=clip_stats.clipped)
+        if guard:
+            # post-update, post-collective selects: the pipelined schedule
+            # (0 serialization edges) is untouched, only the final writes
+            # pick between new and prev
+            params = mask_updates(ginfo.ok, params, prev[0])
+            opt_state = mask_updates(ginfo.ok, opt_state, prev[1])
+            if compress:
+                comp_state = rollback_fold(ginfo.ok, comp_state, prev[2])
+            metrics["skipped"] = (~ginfo.ok).astype(jnp.float32)
+            metrics["guard_flags"] = ginfo.flags.astype(jnp.float32)
         return params, opt_state, comp_state, metrics
 
     return local_step

@@ -17,6 +17,8 @@ from repro.configs.base import ModelConfig
 from repro.core import apply_updates, clip_by_global_norm
 from repro.core.types import Optimizer
 from repro.models.model import forward, loss_fn
+from repro.train import faults
+from repro.train import pipeline as pipeline_mod
 
 
 def optimizer_launches(opt: Optimizer, params, step: int = 0) -> int:
@@ -56,27 +58,39 @@ def optimizer_fp32_buffers(opt: Optimizer, params, shape,
 
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, clip_norm: float = 1.0,
                     remat: str = "full", num_microbatches: int = 1,
-                    grad_dtype: Optional[str] = None):
+                    grad_dtype: Optional[str] = None, guard: bool = False,
+                    fault=None):
     """grad_dtype='bfloat16' compresses the cross-replica gradient reduction
-    (the all-reduce moves half the bytes); accumulation stays fp32."""
+    (the all-reduce moves half the bytes); accumulation stays fp32.
 
-    def grads_of(params, batch):
+    ``clip_norm <= 0`` disables clipping bitwise (``core.mixed
+    clip_by_global_norm``) while ``grad_norm``/``clip_rate`` keep
+    reporting.  ``guard=True`` adds the in-graph non-finite guard: a step
+    with any NaN/Inf gradient leaf is skipped with params and optimizer
+    state bitwise-unchanged, plus ``skipped``/``guard_flags`` metrics
+    (flags in gradient-leaf tree order).  ``fault``
+    (``repro.train.faults.FaultSpec``) injects faults for the proofs."""
+
+    def grads_of(params, batch, step, mb_idx=0):
         (loss, metrics), grads = jax.value_and_grad(
             lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True)(params)
+        grads = faults.apply_grad_fault(fault, grads, step, mb_idx)
         if grad_dtype:
             grads = jax.tree_util.tree_map(
                 lambda g: g.astype(jnp.dtype(grad_dtype)), grads)
         return grads, metrics
 
     def train_step(params, opt_state, batch, step):
+        prev = (params, opt_state)
         if num_microbatches > 1:
             # same split/validation and microbatch-mean metrics as the dp
             # pipeline (train/pipeline.py), so --accum means one thing
             from repro.train.pipeline import split_microbatches
 
-            def mb(carry, mb_batch):
+            def mb(carry, xs):
+                mb_batch, mb_idx = xs if fault is not None else (xs, 0)
                 acc = carry
-                g, m = grads_of(params, mb_batch)
+                g, m = grads_of(params, mb_batch, step, mb_idx)
                 acc = jax.tree_util.tree_map(
                     lambda a, x: a + x.astype(jnp.float32), acc, g)
                 return acc, m
@@ -84,12 +98,15 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, clip_norm: float = 1.0,
             split = split_microbatches(batch, num_microbatches)
             zero = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            gsum, ms = jax.lax.scan(mb, zero, split)
+            xs = ((split, jnp.arange(num_microbatches))
+                  if fault is not None else split)
+            gsum, ms = jax.lax.scan(mb, zero, xs)
             grads = jax.tree_util.tree_map(lambda g: g / num_microbatches, gsum)
             metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m, axis=0), ms)
         else:
-            grads, metrics = grads_of(params, batch)
+            grads, metrics = grads_of(params, batch, step)
 
+        ginfo = pipeline_mod.finite_guard(grads) if guard else None
         grads, clip_stats = clip_by_global_norm(grads, clip_norm)
         if opt.update_apply is not None:
             # single-pass fused apply: the kernel emits the new weights
@@ -100,6 +117,11 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, clip_norm: float = 1.0,
             params = apply_updates(params, updates)
         metrics = dict(metrics, grad_norm=clip_stats.global_norm,
                        clip_rate=clip_stats.clipped)
+        if guard:
+            params = pipeline_mod.mask_updates(ginfo.ok, params, prev[0])
+            opt_state = pipeline_mod.mask_updates(ginfo.ok, opt_state, prev[1])
+            metrics["skipped"] = (~ginfo.ok).astype(jnp.float32)
+            metrics["guard_flags"] = ginfo.flags.astype(jnp.float32)
         return params, opt_state, metrics
 
     return train_step

@@ -40,6 +40,18 @@ is why this cannot run in the main pytest process).  Exercises:
 Prints ``ZERO_SHARD_OK`` as the last line on success; any assertion error
 fails the subprocess (and therefore the parent test).
 
+Numerical-resilience fault injection (``guard`` argv mode): NaN/Inf
+gradient faults and an int8 wire-scale bit-flip are injected into the
+REAL guarded ZeRO-2 step (``repro.train.faults``) on the 4-way mesh, and
+the guarded run is held BITWISE equal — params, momentum, slot stripes,
+AdamW moments and the int8 error-feedback residual — to a clean run with
+the faulted step skipped host-side, at every surviving step, for rmnp and
+normuon on both wires; plus guard transparency (guarded clean == unguarded
+clean bitwise) and the full ``launch/train.py --inject-fault`` rewind
+ladder on llama-60m (skip -> rewind to last-known-good -> bitwise
+recovery of the uninterrupted run; exhausted ladder -> loud abort).
+Prints ``GUARD_OK`` as its last line on success.
+
 Elastic restart fault injection (``elastic`` / ``elastic-phase`` argv
 modes): an 8-way ZeRO-2 training loop over the synthetic tree is SIGKILLed
 mid-run and resumed 4-way (and 4->8) from the surviving atomic checkpoint;
@@ -577,7 +589,8 @@ def two_phase_clip_bitwise():
                   for b in plan.buckets}
         mean = jax.tree_util.tree_map(
             lambda x: jax.lax.pmean(x.astype(jnp.float32), "data"), g)
-        scale, _, stats = two_phase_clip(plan, shards, mean, 1.0, "data", 4)
+        scale, _, stats, _ = two_phase_clip(plan, shards, mean, 1.0,
+                                            "data", 4)
         return scale, stats.global_norm, mean
 
     scale, gnorm, mean = jax.jit(shard_map(
@@ -827,11 +840,304 @@ def elastic_scenario(quick=False):
     print("ELASTIC_OK")
 
 
+# ---------------------------------------------------------------------------
+# numerical-resilience fault injection (guard the real step, skip bitwise)
+# ---------------------------------------------------------------------------
+
+def _guard_batch(cfg, t):
+    """Deterministic batch keyed by the step number, so a run that skips a
+    step consumes exactly the batches of a run that never saw it."""
+    toks = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(7), t),
+                              (16, 16), 0, cfg.vocab)
+    return {"tokens": toks, "labels": toks}
+
+
+def _guard_snap(params, state, comp):
+    """Every leaf the guard must keep bitwise on a skipped step: params,
+    momentum buckets, slot stripes, AdamW moments (the whole optimizer
+    state tree) and the int8 error-feedback residual."""
+    flat = {f"p/{k}": np.asarray(v) for k, v in tree_paths(params)}
+    flat.update({f"o/{k}": np.asarray(v) for k, v in tree_paths(state)})
+    flat.update({f"e/{k}": np.asarray(v) for k, v in tree_paths(comp.error)})
+    return flat
+
+
+def _guard_run(rule, compress, *, guard, fault, steps, accum=1,
+               host_skip=()):
+    """Run ``steps`` real guarded/unguarded pipelined ZeRO-2 steps on the
+    reduced gpt2-60m over the 4-way mesh, snapshotting the full state after
+    every step.  ``host_skip`` steps are not executed at all — the clean
+    reference trajectory for a bitwise-skip proof."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.train.dp_step import init_dp_state, make_dp_train_step
+    from repro.train import pipeline
+
+    mesh = jax.make_mesh((4,), ("data",))
+    cfg = get_config("gpt2-60m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = mixed_optimizer(rule, constant(1e-2), constant(1e-2),
+                          shard_axis="data", shard_size=4, ns_steps=1)
+    names = pipeline.guard_flag_names(opt.bucket_plan(params), params, 4)
+    state = opt.init(params)
+    comp = init_dp_state(params)
+    step_fn = jax.jit(make_dp_train_step(
+        cfg, opt, mesh, zero2=True, opt_state=state, compress=compress,
+        accum=accum, overlap=True, guard=guard, fault=fault))
+    snaps, mets = [], []
+    for t in range(steps):
+        if t in host_skip:
+            snaps.append(_guard_snap(params, state, comp))
+            mets.append(None)
+            continue
+        params, state, comp, m = step_fn(params, state, comp,
+                                         _guard_batch(cfg, t), jnp.int32(t))
+        snaps.append(_guard_snap(params, state, comp))
+        mets.append({k: np.asarray(v) for k, v in m.items()})
+    return snaps, mets, names
+
+
+def _assert_snaps_equal(a, b, tag):
+    for t, (sa, sb) in enumerate(zip(a, b, strict=True)):
+        assert set(sa) == set(sb), (tag, t)
+        for k in sorted(sa):
+            np.testing.assert_array_equal(
+                sa[k], sb[k], err_msg=f"{tag} step {t}: {k} guarded-faulty "
+                "!= clean-with-host-skip")
+
+
+def guard_transparency(rule, compress):
+    """Guard ON with no fault is bitwise the unguarded step — the selects
+    and flag folds cost nothing numerically."""
+    wire = "int8" if compress else "fp32"
+    g, gm, _ = _guard_run(rule, compress, guard=True, fault=None, steps=3)
+    u, _, _ = _guard_run(rule, compress, guard=False, fault=None, steps=3)
+    _assert_snaps_equal(g, u, f"transparency {rule}/{wire}")
+    assert all(float(m["skipped"]) == 0.0 for m in gm), [
+        float(m["skipped"]) for m in gm]
+    print(f"guard transparency {rule}/{wire}: OK (guarded clean == "
+          "unguarded bitwise, 0 skips)")
+
+
+def guard_skip_case(rule, compress, *, kind="nan", accum=1,
+                    microbatch=None, steps=5, bad_step=2):
+    """A {kind} gradient fault at step ``bad_step`` is detected in-graph
+    and the WHOLE step is skipped bitwise: the guarded faulty run equals a
+    clean unguarded run with the same step skipped host-side, on every
+    surviving step, on params + momentum + slots + moments + EF residual."""
+    from repro.train import faults
+
+    wire = "int8" if compress else "fp32"
+    tag = (f"{rule}/{wire}/accum{accum}/{kind}"
+           + (f"@mb{microbatch}" if microbatch is not None else ""))
+    spec = f"{kind}:*:{bad_step}" + ("" if microbatch is None
+                                     else f":{microbatch}")
+    fault = faults.parse_fault(spec)
+    faulty, fmets, names = _guard_run(rule, compress, guard=True,
+                                      fault=fault, steps=steps, accum=accum)
+    clean, _, _ = _guard_run(rule, compress, guard=False, fault=None,
+                             steps=steps, accum=accum, host_skip={bad_step})
+    _assert_snaps_equal(faulty, clean, f"skip {tag}")
+    for t, m in enumerate(fmets):
+        want = 1.0 if t == bad_step else 0.0
+        assert float(m["skipped"]) == want, (tag, t, m["skipped"])
+    # flag attribution: leaf "*" is the first tree leaf; on the exact fp32
+    # wire only its flag may drop, on int8 the poisoned quantization block
+    # may cascade to neighbouring leaves of the same bucket
+    flags = fmets[bad_step]["guard_flags"]
+    assert flags.shape == (len(names),), (flags.shape, len(names))
+    assert flags[0] == 0.0, (tag, "target leaf", names[0], "not flagged")
+    if not compress:
+        others = [names[i] for i in range(len(names)) if flags[i] == 0.0]
+        assert others == [names[0]], (tag, "fp32 cascade", others)
+    healthy = fmets[bad_step - 1]["guard_flags"]
+    assert healthy.min() == 1.0, (tag, "healthy step flags", healthy)
+    print(f"guard skip {tag}: OK (step {bad_step} skipped bitwise, "
+          f"flag -> {names[0]})")
+
+
+def guard_bitflip_case(steps=5, bad_step=2):
+    """A bit-flip on an int8 wire block scale (rank 0's outgoing chunk,
+    after the sender's EF residual is computed) blows the dequantized shard
+    up past fp32 range; the guard's squared-sum flags catch it and the step
+    skips bitwise — including the EF residual rollback."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.train import faults
+
+    cfg = get_config("gpt2-60m").reduced()
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    opt = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                          shard_axis="data", shard_size=4, ns_steps=1)
+    plan = opt.bucket_plan(params)
+    # pick a dense bucket (most stacked slices = the transformer blocks'
+    # weight matrices) — the embed bucket's first rows can carry all-zero
+    # gradients, whose block scale of 0 bit-flips to a benign 2.0
+    bucket = max(plan.buckets, key=lambda b: b.size)
+    fault = faults.parse_fault(f"bitflip:{bucket.key}:{bad_step}")
+    faulty, fmets, _ = _guard_run("rmnp", True, guard=True, fault=fault,
+                                  steps=steps)
+    clean, _, _ = _guard_run("rmnp", True, guard=False, fault=None,
+                             steps=steps, host_skip={bad_step})
+    _assert_snaps_equal(faulty, clean, f"bitflip {bucket.key}")
+    for t, m in enumerate(fmets):
+        want = 1.0 if t == bad_step else 0.0
+        assert float(m["skipped"]) == want, (t, m["skipped"])
+    assert fmets[bad_step]["guard_flags"].min() == 0.0, (
+        "no flag fired for the corrupted wire block")
+    print(f"guard bitflip {bucket.key}: OK (wire-scale flip at step "
+          f"{bad_step} skipped bitwise, EF residual rolled back)")
+
+
+def guard_overlap_report():
+    """The guarded pipelined step keeps zero cross-bucket serialization
+    edges in the compiled HLO — the post-update selects must not chain the
+    per-bucket collective/update pipelines (both wires)."""
+    from repro.configs import get_config
+    from repro.launch.hlo_cost import collective_overlap_report
+    from repro.models import init_params
+    from repro.train.dp_step import init_dp_state, make_dp_train_step
+
+    mesh = jax.make_mesh((4,), ("data",))
+    cfg = get_config("gpt2-60m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (16, 16), 0, cfg.vocab)
+    comp = init_dp_state(params)
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+        (params, comp, {"tokens": toks, "labels": toks}))
+    opt = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
+                          shard_axis="data", shard_size=4)
+    st = jax.eval_shape(opt.init, params)
+    plan = opt.bucket_plan(params)
+    bks = [(b.key, b.d_in, b.d_out) for b in plan.buckets]
+    for compress in (False, True):
+        step = make_dp_train_step(cfg, opt, mesh, zero2=True, opt_state=st,
+                                  compress=compress, overlap=True,
+                                  guard=True)
+        hlo = jax.jit(step).lower(abstract[0], st, abstract[1], abstract[2],
+                                  jnp.int32(0)).compile().as_text()
+        rep = collective_overlap_report(hlo, bks)
+        assert rep["collectives"], "no gradient collectives in guarded HLO"
+        assert rep["n_serialization_edges"] == 0, (
+            compress, rep["serialization_edges"])
+    print("guard overlap: OK (guarded pipelined step keeps 0 "
+          "serialization edges, both wires)")
+
+
+def _run_launch(extra, n_dev=4, timeout=900):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [str(Path(__file__).resolve().parents[1] / "src"),
+                    os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "llama-60m", "--optimizer", "rmnp", "--zero2",
+           "--guard", "--steps", "12", "--batch", "8", "--seq", "32",
+           "--log-every", "1", "--ckpt-every", "2"] + extra
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def guard_rewind_ladder():
+    """The full launch-driver escalation ladder on llama-60m: a sticky NaN
+    fault exhausts the skip budget, the driver rewinds to the last-known-
+    good checkpoint, replays the data stream deterministically with the
+    fault disarmed, and finishes BITWISE equal to an uninterrupted clean
+    run — loss curve included.  A run whose rewind budget is 0 must abort
+    loudly instead of looping.
+
+    The ladder runs on the fp32 wire (``--no-compress``): the int8 wire's
+    error-feedback residual is genuinely per-device state (each rank keeps
+    the quantization error of its own all-to-all chunk) hiding under a
+    replicated ``P()`` annotation, so a host checkpoint can only capture
+    rank 0's copy and an int8-wire rewind replays to ~1e-5 of the clean
+    trajectory rather than bitwise.  The int8 bitwise guarantee for the
+    guard itself is carried by the in-process mesh proofs above
+    (``guard_skip_case(..., compress=True)``), which never leave the
+    device."""
+    import json
+
+    work = tempfile.mkdtemp(prefix="rmnp_guard_ladder_")
+    try:
+        pa, pb = f"{work}/a.npz", f"{work}/b.npz"
+        la, lb = f"{work}/a.json", f"{work}/b.json"
+        ra = _run_launch(["--no-compress",
+                          "--ckpt-dir", f"{work}/A", "--log-file", la,
+                          "--dump-params", pa])
+        assert ra.returncode == 0, (ra.stdout, ra.stderr)
+        rb = _run_launch(["--no-compress",
+                          "--ckpt-dir", f"{work}/B", "--log-file", lb,
+                          "--dump-params", pb,
+                          "--inject-fault", "nan:*:6+",
+                          "--anomaly-skip-budget", "2",
+                          "--anomaly-rewind-budget", "2",
+                          "--anomaly-lr-backoff", "1.0",
+                          "--anomaly-health-window", "2"])
+        assert rb.returncode == 0, (rb.stdout, rb.stderr)
+        assert "rewind #1" in rb.stdout, rb.stdout
+        assert "disarming the injected fault" in rb.stdout, rb.stdout
+        assert "SKIPPED bitwise" in rb.stdout, rb.stdout
+        with np.load(pa) as a, np.load(pb) as b:
+            assert set(a.files) == set(b.files)
+            for k in sorted(a.files):
+                np.testing.assert_array_equal(
+                    a[k], b[k],
+                    err_msg=f"rewound params {k} != uninterrupted")
+        # the replayed tail of B's loss curve (last entry per step wins)
+        # must equal A's uninterrupted curve exactly from the rewind point
+        curve_a = {m["step"]: m["loss"] for m in json.loads(
+            Path(la).read_text())}
+        curve_b = {}
+        for m in json.loads(Path(lb).read_text()):
+            curve_b[m["step"]] = m["loss"]
+        for s in range(4, 12):
+            assert curve_b[s] == curve_a[s], (
+                s, curve_b[s], curve_a[s], "replayed loss != uninterrupted")
+        print("guard rewind: OK (ladder rewound to last-known-good, "
+              "replayed bitwise to the uninterrupted params + loss curve)")
+
+        rc = _run_launch(["--no-compress", "--ckpt-dir", f"{work}/C",
+                          "--inject-fault", "nan:*:3+",
+                          "--anomaly-skip-budget", "1",
+                          "--anomaly-rewind-budget", "0"])
+        assert rc.returncode != 0, (rc.stdout, rc.stderr)
+        assert "escalation ladder exhausted" in rc.stderr, rc.stderr
+        print("guard abort: OK (exhausted ladder raises, naming the "
+              "post-mortem)")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+def guard_scenario(quick=False):
+    """The fault-injection proof matrix.  ``quick`` (the pytest tier-2
+    hook) runs transparency plus the NaN skip proof on both wires; the
+    full mode (CI) adds inf, microbatch-targeted accum faults, the wire
+    bit-flip, the guarded overlap report and the launch rewind ladder."""
+    guard_transparency("rmnp", False)
+    guard_skip_case("rmnp", False)
+    guard_skip_case("rmnp", True)
+    if not quick:
+        guard_transparency("rmnp", True)
+        guard_skip_case("normuon", False)
+        guard_skip_case("normuon", True)
+        guard_skip_case("rmnp", False, kind="inf")
+        guard_skip_case("rmnp", False, accum=4, microbatch=2)
+        guard_bitflip_case()
+        guard_overlap_report()
+        guard_rewind_ladder()
+    print("GUARD_OK")
+
+
 if __name__ == "__main__":
     if len(sys.argv) > 1 and sys.argv[1] == "elastic-phase":
         elastic_phase(_phase_args(sys.argv[2:]))
     elif len(sys.argv) > 1 and sys.argv[1] == "elastic":
         elastic_scenario(quick="--quick" in sys.argv[2:])
+    elif len(sys.argv) > 1 and sys.argv[1] == "guard":
+        guard_scenario(quick="--quick" in sys.argv[2:])
     else:
         synthetic_four_way()
         synthetic_traced_buffers()

@@ -129,12 +129,15 @@ class TestTwoPhaseClip:
             chunks = gather_chunks(plan, g, 1, dtype=jnp.float32)
             shards = {b.key: exact_reduce_scatter(chunks[b.key], "data")
                       for b in plan.buckets}
-            scale, _, stats = two_phase_clip(plan, shards, g, 1.0, "data", 1)
-            return scale, stats.global_norm
+            scale, _, stats, ginfo = two_phase_clip(plan, shards, g, 1.0,
+                                                    "data", 1)
+            return scale, stats.global_norm, ginfo.ok, ginfo.flags
 
-        scale, gnorm = jax.jit(shard_map(
-            run, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),
+        scale, gnorm, ok, flags = jax.jit(shard_map(
+            run, mesh=mesh, in_specs=(P(),), out_specs=(P(), P(), P(), P()),
             check_rep=False))(grads)
+        assert bool(ok) and bool(np.all(np.asarray(flags)))
+        assert flags.shape == (len(grads),)  # one finite flag per leaf
         _, ref = clip_by_global_norm(grads, 1.0)
         assert float(ref.global_norm) > 1.0  # clip engaged
         np.testing.assert_array_equal(np.asarray(gnorm),

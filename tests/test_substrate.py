@@ -60,6 +60,23 @@ class TestDataPipeline:
         b = s.sample(step)["tokens"]
         np.testing.assert_array_equal(a, b)
 
+    def test_replay_full_batch_bitwise(self):
+        """Deterministic batch replay for the rewind ladder: a stream
+        resumed at ``start_step`` replays the exact same batches from that
+        point on — every key, bitwise — and lands on the same stream
+        position."""
+        cfg = get_config("gpt2-small").reduced()
+        s1 = make_stream(cfg, 32, 4, seed=7)
+        batches = [next(s1) for _ in range(9)]
+        s2 = make_stream(cfg, 32, 4, seed=7, start_step=4)
+        for t in range(4, 9):
+            b = next(s2)
+            assert set(b) == set(batches[t])
+            for k in b:
+                np.testing.assert_array_equal(
+                    b[k], batches[t][k], err_msg=f"step {t} key {k}")
+        assert s2.step == s1.step
+
     def test_frontend_batches(self):
         vlm = get_config("paligemma-3b").reduced()
         b = next(make_stream(vlm, 16, 2))
@@ -148,6 +165,25 @@ class TestCheckpoint:
         assert (step, data_step) == (2, 20)
         # the retried commit pruned step 1 (keep=1) but kept itself
         assert mgr._committed_steps() == [2]
+
+    def test_torn_manifest_falls_back(self, tmp_path):
+        """An unparseable manifest.json under a COMMITTED marker (torn at
+        the filesystem level after commit) is treated exactly like a
+        missing commit marker: the checkpoint becomes invisible with a
+        warning and restore_latest falls back to the previous step."""
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        state = {"w": jnp.arange(4.0)}
+        mgr.save(1, state, data_step=10)
+        mgr.save(2, state, data_step=20)
+        (tmp_path / "step_000000002" / "manifest.json").write_text(
+            "{ garbage")
+        with pytest.warns(RuntimeWarning, match="manifest.json"):
+            assert mgr.latest_step() == 1
+        with pytest.warns(RuntimeWarning, match="manifest.json"):
+            out, step, data_step = mgr.restore_latest(state)
+        assert (step, data_step) == (1, 10)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(state["w"]))
 
     def test_async_save(self, tmp_path):
         mgr = CheckpointManager(str(tmp_path), async_save=True)

@@ -69,7 +69,7 @@ def bench_guard(arch: str, batch: int, seq: int, iters: int):
     opt = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
                           shard_axis="data", shard_size=n_dev)
     st = opt.init(params)
-    comp = init_dp_state(params)
+    comp = init_dp_state(params, n_dev)
 
     recs = []
     for compress in (False, True):

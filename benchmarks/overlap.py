@@ -47,7 +47,7 @@ def bench_overlap(arch: str, batch: int, seq: int, accums, iters: int):
     opt = mixed_optimizer("rmnp", constant(1e-2), constant(1e-2),
                           shard_axis="data", shard_size=n_dev)
     st = opt.init(params)
-    comp = init_dp_state(params)
+    comp = init_dp_state(params, n_dev)
 
     valid = [a for a in accums if batch % (n_dev * a) == 0]
     if not valid:

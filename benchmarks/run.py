@@ -13,11 +13,12 @@
 | overlap         | ZeRO-2 serialized-vs-pipelined step time |
 | faceoff         | optimizer family, equal wall-clock; bucketed-vs-per-leaf Muon dispatch |
 | guard_overhead  | in-graph non-finite guard cost (<= 3% envelope) |
+| checkpoint_stall| async vs blocking checkpoint save stall  |
 
-``overlap`` and ``guard_overhead`` are opt-in here (``--only ...``): run
-them directly (``python -m benchmarks.overlap``) to get the 4-device CPU
-mesh — via this driver jax is already initialized with however many
-devices exist.
+``overlap``, ``guard_overhead`` and ``checkpoint_stall`` are opt-in here
+(``--only ...``): run them directly (``python -m benchmarks.overlap``) to
+get the 4-device CPU mesh — via this driver jax is already initialized
+with however many devices exist.
 
 After the benches, every ``artifacts/bench/BENCH_*.json`` is aggregated
 into ``BENCH_summary.json`` (stable schema: artifact name -> headline
@@ -46,6 +47,7 @@ BENCHES = {
     "roofline_report": lambda full: roofline_report.main([]),
     "overlap": lambda full: _overlap(full),
     "guard_overhead": lambda full: _guard_overhead(full),
+    "checkpoint_stall": lambda full: _checkpoint_stall(full),
     "faceoff": lambda full: faceoff.main(
         [] if full else ["--steps", "40", "--batch", "4", "--seq", "32",
                          "--iters", "3"]),
@@ -63,11 +65,16 @@ def _guard_overhead(full: bool):
     return guard_overhead.main([] if full else ["--iters", "10"])
 
 
+def _checkpoint_stall(full: bool):
+    from benchmarks import checkpoint_stall
+    return checkpoint_stall.main([] if full else ["--iters", "5"])
+
+
 # small identifying keys kept verbatim so summary rows map back to their
 # configuration across PRs even when record counts or ordering change
 _ID_KEYS = ("bench", "size", "arch", "wire", "accum", "n_dev", "batch",
             "seq", "layers", "d_model", "timed_backend", "optimizer",
-            "d_in", "d_out")
+            "d_in", "d_out", "writer")
 
 
 def _headline(record: dict) -> dict:
@@ -150,7 +157,8 @@ def main() -> None:
         summarize()
         return
     names = args.only or [n for n in BENCHES
-                          if n not in ("overlap", "guard_overhead")]
+                          if n not in ("overlap", "guard_overhead",
+                                       "checkpoint_stall")]
     failures = []
     for name in names:
         print(f"\n{'=' * 70}\n== benchmark: {name}\n{'=' * 70}", flush=True)

@@ -91,7 +91,7 @@ def _fixture():
     cfg = get_config("gpt2-60m").reduced()
     params = jax.eval_shape(lambda k: init_params(cfg, k),
                             jax.random.PRNGKey(0))
-    comp = jax.eval_shape(init_dp_state, params)
+    comp = jax.eval_shape(lambda p: init_dp_state(p, N_DEV), params)
     toks = jax.ShapeDtypeStruct((4 * N_DEV, 16), jnp.int32)
     _FIXTURE.update(
         cfg=cfg, params=params, comp=comp,

@@ -41,6 +41,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import PyTree, path_str
 
@@ -51,9 +52,57 @@ class CompressionState(NamedTuple):
     error: PyTree  # fp32 error-feedback accumulators, like-params
 
 
-def init_compression_state(params: PyTree) -> CompressionState:
+def init_compression_state(params: PyTree,
+                           n_dev: Optional[int] = None) -> CompressionState:
+    """Zero error-feedback accumulators.
+
+    ``n_dev=None`` (legacy / inside-shard_map view): leaves are
+    like-params.  With an int ``n_dev``, every leaf gains an explicit
+    leading *device* axis — ``(n_dev, *p.shape)`` — sharded ``P("data")``
+    across the mesh so host checkpoints capture every rank's residual
+    (not just rank 0's replica), making int8-wire restores bitwise.
+    Inside the step the per-rank slice is ``local_view``; the train-step
+    wrappers rewrap with ``from_local``."""
+    if n_dev is None:
+        return CompressionState(error=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
     return CompressionState(error=jax.tree_util.tree_map(
-        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        lambda p: jnp.zeros((n_dev,) + p.shape, jnp.float32), params))
+
+
+def local_view(state: CompressionState) -> CompressionState:
+    """Strip the leading device axis inside shard_map: each rank's
+    ``(1, *shape)`` block becomes the like-params local residual."""
+    return CompressionState(error=jax.tree_util.tree_map(
+        lambda e: e[0], state.error))
+
+
+def from_local(state: CompressionState) -> CompressionState:
+    """Re-add the leading device axis (length 1 per rank) so shard_map's
+    ``P("data")`` out-spec reassembles the global ``(n_dev, ...)`` array."""
+    return CompressionState(error=jax.tree_util.tree_map(
+        lambda e: e[None], state.error))
+
+
+def reshard_error(state: CompressionState, n_old: int,
+                  n_new: int) -> CompressionState:
+    """Re-lay the device-axis EF residual for an elastic N -> N' restart.
+
+    The *applied* compression bias at any instant is
+    ``sum_r err_r / n_dev`` in mean-gradient units (each rank's residual
+    is folded into its addend before the /n_dev wire mean).  Moving to a
+    new mesh therefore puts ``sum(err) * (n_new / n_old)`` on rank 0 and
+    zeros elsewhere — the outstanding mass is preserved exactly, and when
+    the residuals are identically zero (as after any exactly-representable
+    step) the reshard is bitwise zero -> zero."""
+    host = jax.tree_util.tree_map(lambda e: np.asarray(e), state.error)
+
+    def leaf(e):
+        out = np.zeros((n_new,) + e.shape[1:], np.float32)
+        out[0] = e.sum(axis=0) * (float(n_new) / float(n_old))
+        return out
+
+    return CompressionState(error=jax.tree_util.tree_map(leaf, host))
 
 
 # ---------------------------------------------------------------------------

@@ -24,10 +24,13 @@ monitor module's ``detect -> checkpoint -> restart -> resume`` ladder:
 unpad every bucket to its true ``L`` under the writing plan, repad under
 the plan built with ``pad_multiple=N'``.  Pad slices are identically zero,
 so the transform is exact — not one real slice changes.  Per-leaf state
-(the AdamW momenta of the mixed optimizer, the int8 error-feedback
-residual of ``CompressionState``) is laid out like params and passes
-through untouched; chunking is pure slicing (linear), so the carried
-residual stays exact under the new chunk boundaries.
+(the AdamW momenta of the mixed optimizer) is laid out like params and
+passes through untouched.  The int8 error-feedback residual of
+``CompressionState`` carries an explicit leading device axis (one slice
+per writer rank); :func:`restore_resharded` re-lays it for the new mesh
+via ``compression.reshard_error`` — outstanding residual mass is
+preserved exactly, and the transform is bitwise zero -> zero whenever
+the residuals are clean.
 
 Mesh-size detection is driven by the layout manifest
 (:func:`state_layout`) the checkpoint manager stores at save time; layouts
@@ -118,8 +121,8 @@ def state_layout(opt: Optimizer, params: PyTree, *, mesh_size: int,
 def _reshardable_part(layout: Dict[str, Any]) -> Dict[str, Any]:
     """Everything in a layout that must match for a reshard to be legal —
     i.e. the layout minus the mesh-size-dependent fields (``mesh_size``,
-    ``shard_size``, per-bucket ``padded``) and minus ``compress`` (the EF
-    residual is per-leaf and carried either way)."""
+    ``shard_size``, per-bucket ``padded``) and minus ``compress`` (the
+    device-axis EF residual reshard handles either wire)."""
     plan = layout.get("plan")
     return {"rule": layout.get("rule"),
             "slots": list(layout.get("slots") or []),
@@ -192,6 +195,19 @@ def reshard_bucketed_state(state: Any, old_plan: bucketing.BucketPlan,
     return state._replace(buckets=new_buckets, slots=new_slots)
 
 
+def _old_mesh_comp_template(comp_state: Any, n_old: int) -> Any:
+    """The writer-mesh restore template for a device-axis EF residual:
+    swap the leading (device) dim of every leaf for the writer's mesh
+    size.  A legacy like-params residual (no device axis recorded in this
+    run's template either) passes through unchanged."""
+    def leaf(e):
+        if e.ndim < 1:
+            return jax.ShapeDtypeStruct(e.shape, e.dtype)
+        return jax.ShapeDtypeStruct((n_old,) + tuple(e.shape[1:]), e.dtype)
+
+    return jax.tree_util.tree_map(leaf, comp_state)
+
+
 def restore_resharded(mgr: Any, step: int, params: PyTree, comp_state: Any,
                       *, opt_new: Optimizer,
                       opt_old: Optimizer) -> Tuple[Any, int]:
@@ -199,13 +215,23 @@ def restore_resharded(mgr: Any, step: int, params: PyTree, comp_state: Any,
     written under ``opt_old``'s layout and re-lay the optimizer state out
     for ``opt_new``.  The writer-mesh restore template comes from
     ``jax.eval_shape`` — no old-layout state is ever materialized beyond
-    the restored host arrays.  The ``CompressionState`` EF residual is
-    per-leaf (mesh-agnostic) and restores as-is; chunking linearity keeps
-    it exact under the new rank boundaries.  Returns ``((params,
-    opt_state, comp_state), data_step)``."""
+    the restored host arrays.  The ``CompressionState`` EF residual
+    carries an explicit leading device axis (one slice per writer rank,
+    so every rank's outstanding residual survives the checkpoint); it is
+    re-laid for the new mesh by :func:`compression.reshard_error` —
+    sum-preserving in applied-update units, and bitwise zero -> zero
+    whenever the residuals are clean.  Returns ``((params, opt_state,
+    comp_state), data_step)``."""
+    from repro.distributed import compression
+
+    n_old = int(getattr(opt_old, "shard_size", 1) or 1)
+    n_new = int(getattr(opt_new, "shard_size", 1) or 1)
     old_template = jax.eval_shape(opt_old.init, params)
+    comp_template = _old_mesh_comp_template(comp_state, n_old)
     (params, old_state, comp_state), data_step = mgr.restore(
-        step, (params, old_template, comp_state))
+        step, (params, old_template, comp_template))
     new_state = reshard_bucketed_state(
         old_state, opt_old.bucket_plan(params), opt_new.bucket_plan(params))
+    if n_old != n_new:
+        comp_state = compression.reshard_error(comp_state, n_old, n_new)
     return (params, new_state, comp_state), data_step

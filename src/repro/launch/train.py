@@ -159,7 +159,7 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
 
     if zero2:
         from repro.train.dp_step import init_dp_state
-        comp_state = init_dp_state(params)
+        comp_state = init_dp_state(params, n_dev)
     else:
         comp_state = None
 
@@ -202,18 +202,25 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
     stream = make_stream(cfg, seq, batch, seed=seed, start_step=data_step)
     jit_step = build_step(opt, fault_spec)
 
-    hang_guard, snapshot = None, {}
+    hang_guard = None
     if watchdog_deadline:
         from repro.distributed.monitor import HangGuard
 
         def emergency_save():
-            if mgr is None or not snapshot:
-                print("[watchdog] no checkpoint dir or no completed step — "
-                      "nothing to save", flush=True)
+            if mgr is None:
+                print("[watchdog] no checkpoint dir — nothing to save",
+                      flush=True)
                 return
-            mgr.save(snapshot["step"], snapshot["state"],
-                     data_step=snapshot["data_step"], block=True,
-                     layout=layout)
+            # reuses the manager's pinned double buffer (filled at every
+            # step boundary below) — no device access, safe while the
+            # step loop is hung on donated buffers
+            saved = mgr.emergency_save()
+            if saved is None:
+                print("[watchdog] no snapshot newer than the last "
+                      "committed checkpoint — nothing to save", flush=True)
+            else:
+                print(f"[watchdog] emergency checkpoint written at step "
+                      f"{saved}", flush=True)
         hang_guard = HangGuard(watchdog_deadline, emergency_save)
 
     monitor = None
@@ -269,15 +276,15 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
                     (params, opt_state, comp_state) if zero2
                     else (params, opt_state))
             if hang_guard is not None:
-                # host snapshot BEFORE recording: the emergency save must
-                # never read live device buffers — the next step donates
-                # them, and a hung step already owns its donated inputs
-                snapshot.update(
-                    step=step + 1, data_step=stream.step,
-                    state=jax.tree_util.tree_map(
-                        np.asarray,
-                        (params, opt_state, comp_state) if zero2
-                        else (params, opt_state)))
+                # host snapshot into the manager's double buffer BEFORE
+                # recording: the emergency save must never read live
+                # device buffers — the next step donates them, and a hung
+                # step already owns its donated inputs
+                if mgr is not None:
+                    mgr.snapshot(step + 1,
+                                 (params, opt_state, comp_state) if zero2
+                                 else (params, opt_state),
+                                 data_step=stream.step, layout=layout)
                 hang_guard.record(step, time.time() - t_step)
             if monitor is not None:
                 gflags = np.asarray(metrics.pop("guard_flags"))
@@ -306,18 +313,10 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
                         if state_shardings is not None:
                             state = jax.device_put(state, state_shardings)
                         if zero2:
+                            # every rank's EF residual rides the sharded
+                            # checkpoint (device-axis CompressionState), so
+                            # the replayed tail is bitwise on both wires
                             params, opt_state, comp_state = state
-                            if compress:
-                                # the int8 error-feedback residual is
-                                # per-device state under a replicated
-                                # annotation; a host checkpoint holds only
-                                # rank 0's copy, so the replayed tail is
-                                # ~1e-5-close, not bitwise (fp32 wire IS
-                                # bitwise — no residual to lose)
-                                print("[train] rewind: int8 EF residual "
-                                      "restored from rank 0's copy; replay "
-                                      "is approximate on this wire",
-                                      flush=True)
                         else:
                             params, opt_state = state
                         rewind_to = good
@@ -327,7 +326,7 @@ def train(arch: str, optimizer: str = "rmnp", steps: int = 100,
                         opt_state = opt.init(params)
                         if zero2:
                             from repro.train.dp_step import init_dp_state
-                            comp_state = init_dp_state(params)
+                            comp_state = init_dp_state(params, n_dev)
                         rewind_to, data_step = 0, 0
                     if fault_spec is not None:
                         print("[train] rewind: disarming the injected "

@@ -66,6 +66,10 @@ from repro.distributed.compression import (
     CompressionState, compressed_mean, compressed_reduce_scatter_leaf,
     exact_mean, exact_reduce_scatter, init_compression_state, rollback_fold,
 )
+from repro.distributed.compression import (
+    from_local as compression_from_local,
+    local_view as compression_local_view,
+)
 from repro.distributed.sharding import bucket_specs
 from repro.train import faults, pipeline
 
@@ -254,12 +258,27 @@ def make_dp_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
 def _wrap(local_step, mesh, axis_name, state_spec):
     rep = P()
     batch_spec = P(axis_name)
+    comp_spec = P(axis_name)  # EF residual: explicit leading device axis
+
+    def sharded_step(params, opt_state, comp_state, batch, step):
+        # inside shard_map each rank sees its (1, *shape) residual block;
+        # the step logic runs on the like-params local view and the
+        # device axis is re-added so the P(axis_name) out-spec reassembles
+        # the global (n_dev, ...) array — host saves then carry every
+        # rank's residual, making int8-wire restores bitwise
+        comp_state = compression_local_view(comp_state)
+        params, opt_state, comp_state, metrics = local_step(
+            params, opt_state, comp_state, batch, step)
+        return params, opt_state, compression_from_local(comp_state), metrics
+
     return shard_map(
-        local_step, mesh=mesh,
-        in_specs=(rep, state_spec, rep, batch_spec, rep),
-        out_specs=(rep, state_spec, rep, rep),
+        sharded_step, mesh=mesh,
+        in_specs=(rep, state_spec, comp_spec, batch_spec, rep),
+        out_specs=(rep, state_spec, comp_spec, rep),
         check_rep=False)
 
 
-def init_dp_state(params):
-    return init_compression_state(params)
+def init_dp_state(params, n_dev: int = 1):
+    """Device-axis EF state for the dp train step: leaves are
+    ``(n_dev, *p.shape)``, sharded ``P("data")`` by ``_wrap``."""
+    return init_compression_state(params, n_dev)

@@ -26,7 +26,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core import bucketing, constant, mixed_optimizer
 from repro.core.engine import matrix_optimizer
 from repro.core.rules import make_rule, rule_names
-from repro.distributed import elastic
+from repro.distributed import compression, elastic
 from repro.distributed.compression import init_compression_state
 from repro.distributed.monitor import HangGuard
 
@@ -79,7 +79,13 @@ class TestReshardTransform:
         params0 = make(0)
         params, state8 = warm_state(opt8, params0)
         plan8, plan4 = opt8.bucket_plan(params), opt4.bucket_plan(params)
-        comp = init_compression_state(params)
+        # device-axis EF residual, nonzero: rank r holds the constant r, so
+        # the 8 -> 4 reshard must fold the outstanding mass
+        # sum(0..7) * (4/8) = 14 onto new rank 0 and zero the rest
+        comp = init_compression_state(params, 8)
+        comp = comp._replace(error=jax.tree_util.tree_map(
+            lambda e: e + jnp.arange(8, dtype=jnp.float32).reshape(
+                (8,) + (1,) * (e.ndim - 1)), comp.error))
 
         state4 = elastic.reshard_bucketed_state(state8, plan8, plan4)
         for b in plan4.buckets:
@@ -113,7 +119,12 @@ class TestReshardTransform:
         assert data_step == 7
         assert_tree_equal(p_r, params)
         assert_tree_equal(s_r, state4, msg=f"{rule}: managed reshard")
-        assert_tree_equal(c_r, comp)
+        expected_err = jax.tree_util.tree_map(
+            lambda e: np.pad(np.full((1,) + e.shape[1:], 14.0, np.float32),
+                             [(0, 3)] + [(0, 0)] * (e.ndim - 1)),
+            comp.error)
+        assert_tree_equal(c_r.error, expected_err,
+                          msg=f"{rule}: EF residual reshard lost mass")
 
         # a continued step agrees bitwise under either layout
         g = make(99)
@@ -357,15 +368,16 @@ class TestTrainElasticRestore:
         opt1, opt4 = opt_for(1), opt_for(4)
         cfg = get_config(arch).reduced()
         params0 = init_params(cfg, jax.random.PRNGKey(seed))
-        comp0 = init_compression_state(params0)
+        comp0 = init_compression_state(params0, 1)
         (p, s1, c), data_step = mgr.restore(
             2, (params0, jax.eval_shape(opt1.init, params0), comp0))
         s4 = elastic.reshard_bucketed_state(
             s1, opt1.bucket_plan(p), opt4.bucket_plan(p))
+        c4 = compression.reshard_error(c, 1, 4)
         layout4 = elastic.state_layout(opt4, p, mesh_size=4, rule="rmnp",
                                        opt_state=s4)
         mgr4 = CheckpointManager(str(d_resh))
-        mgr4.save(2, (p, s4, c), data_step=data_step, block=True,
+        mgr4.save(2, (p, s4, c4), data_step=data_step, block=True,
                   layout=layout4)
 
         # both dirs resume; the resharded one goes through the elastic path

@@ -258,3 +258,22 @@ def test_guard_fault_injection_quick():
         env=env, capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert r.stdout.rstrip().endswith("GUARD_OK"), r.stdout
+
+
+@pytest.mark.skipif(os.environ.get("CI") == "true",
+                    reason="CI runs the full ckpt corruption sweep in its "
+                           "own step")
+def test_ckpt_fault_injection_quick():
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [str(root / "src"), os.environ.get("PYTHONPATH", "")]
+               ).rstrip(os.pathsep))
+    r = subprocess.run(
+        [sys.executable, str(root / "tests" / "_zero_shard_worker.py"),
+         "ckpt", "--quick"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert r.stdout.rstrip().endswith("CKPT_OK"), r.stdout

@@ -191,6 +191,96 @@ class TestCheckpoint:
         mgr.wait()
         assert mgr.latest_step() == 5
 
+    def test_prune_pins_newest_good_step(self, tmp_path):
+        """Retention never drops the newest last-known-good step: it is
+        the rewind ladder's restore target, and ``keep`` newer (possibly
+        poisoned) checkpoints must not push it out of the window."""
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+        state = {"w": jnp.arange(8.0)}
+        mgr.save(1, state, data_step=10)
+        mgr.mark_good(1)
+        for s in (2, 3, 4):
+            mgr.save(s, state)
+        assert mgr._committed_steps() == [1, 3, 4]
+        assert mgr.latest_good_step() == 1
+        # a newer good step releases the old pin on the next prune
+        mgr.mark_good(4)
+        mgr._prune()
+        assert mgr._committed_steps() == [3, 4]
+
+    def test_prune_never_deletes_mid_restore(self, tmp_path, monkeypatch):
+        """A checkpoint being restored is pinned: retention triggered by
+        newer commits must not delete it under the reader (the race fixed
+        alongside the async writer — prune used to free-run against
+        readers)."""
+        import threading
+
+        mgr = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+        state = {"w": jnp.arange(256.0)}
+        mgr.save(1, state, data_step=10)
+
+        real = CheckpointManager._load_arrays
+        entered, release = threading.Event(), threading.Event()
+
+        def slow(self, d, manifest):
+            entered.set()
+            assert release.wait(10)
+            return real(self, d, manifest)
+
+        monkeypatch.setattr(CheckpointManager, "_load_arrays", slow)
+        out = {}
+        th = threading.Thread(
+            target=lambda: out.update(r=mgr.restore(1, state)))
+        th.start()
+        assert entered.wait(10)
+        monkeypatch.setattr(CheckpointManager, "_load_arrays", real)
+        # two newer commits while step 1 is mid-read: keep=1 would drop
+        # it, the mid-restore pin must not
+        mgr.save(2, state)
+        mgr.save(3, state)
+        assert (tmp_path / "step_000000001" / "COMMITTED").exists()
+        release.set()
+        th.join(10)
+        restored, data_step = out["r"]
+        assert data_step == 10
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+        # read finished: the pin is gone, the next prune reclaims it
+        mgr._prune()
+        assert mgr._committed_steps() == [3]
+
+    def test_manifest_parse_cached(self, tmp_path, monkeypatch):
+        """restore_latest / latest_step / good_steps stop re-parsing every
+        manifest per call: parses are cached keyed on file stat and the
+        directory listing on its mtime, invalidated by save/prune."""
+        import repro.checkpoint.manager as manager_mod
+
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        state = {"w": jnp.arange(4.0)}
+        mgr.save(1, state, data_step=10)
+        mgr.save(2, state, data_step=20)
+
+        calls = []
+        real_loads = manager_mod.json.loads
+
+        def counting_loads(s, *a, **k):
+            calls.append(1)
+            return real_loads(s, *a, **k)
+
+        monkeypatch.setattr(manager_mod.json, "loads", counting_loads)
+        for _ in range(5):
+            assert mgr.latest_step() == 2
+            assert mgr.good_steps() == []
+            assert mgr.restore_latest(state) is not None
+        assert not calls, f"{len(calls)} manifest re-parses despite cache"
+        # a new commit invalidates; afterwards reads are cached again
+        mgr.save(3, state, data_step=30)
+        assert calls, "save must invalidate the manifest cache"
+        calls.clear()
+        assert mgr.latest_step() == 3
+        assert mgr.restore_latest(state) is not None
+        assert not calls, "cache not repopulated after invalidation"
+
     def test_train_restart_resumes_stream(self, tmp_path):
         """End-to-end fault-tolerance: kill + restart reproduces the batch."""
         from repro.launch.train import train
